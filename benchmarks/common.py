@@ -1,0 +1,50 @@
+"""Shared benchmark scaffolding.
+
+Output contract (benchmarks/run.py): one CSV line per measurement,
+``name,us_per_call,derived`` where ``derived`` carries the figure's headline
+quantity (speedup, reduction factor, counts …).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, ligd, network, profiles
+from repro.core.era import Weights
+
+MODELS = ("nin", "yolov2", "vgg16")
+
+
+def scenario(seed=0, **overrides):
+    cfg = network.small_config(**overrides)
+    return network.make_scenario(jax.random.PRNGKey(seed), cfg)
+
+
+def default_q(scn, q_s=0.4):
+    return jnp.full((scn.cfg.n_users,), q_s)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def solve_era(scn, prof, q, max_steps=200, **kw):
+    return ligd.solve(scn, prof, q, Weights(), max_steps=max_steps, **kw)
+
+
+def mean_t(out):
+    return float(np.asarray(out.terms.t).mean())
+
+
+def mean_e(out):
+    return float(np.asarray(out.terms.e).mean())

@@ -1,0 +1,28 @@
+"""Beyond-paper: ERA+ per-user split selection vs the paper's single global
+split, on the paper objective Γ and on QoE violations."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MODELS, default_q, emit, scenario, timed
+from repro.core import ligd, profiles, qoe
+
+
+def run(quick=False):
+    scn = scenario()
+    q = default_q(scn, 0.3)
+    for model in (MODELS[:1] if quick else MODELS):
+        prof = profiles.get_profile(model)
+        base, us_b = timed(ligd.solve, scn, prof, q, max_steps=300)
+        plus, us_p = timed(ligd.solve, scn, prof, q, max_steps=300,
+                           per_user_split=True)
+        emit(f"eraplus.gamma.{model}.global", us_b,
+             f"{float(base.terms.gamma):.3f}")
+        emit(f"eraplus.gamma.{model}.per_user", us_p,
+             f"{float(plus.terms.gamma):.3f}")
+        n_b, _ = qoe.violations(base.terms.t, q)
+        n_p, _ = qoe.violations(plus.terms.t, q)
+        emit(f"eraplus.violations.{model}", 0.0,
+             f"{int(n_b)}->{int(n_p)}")
+        emit(f"eraplus.distinct_splits.{model}", 0.0,
+             len(np.unique(plus.s)))

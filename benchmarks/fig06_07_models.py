@@ -1,0 +1,32 @@
+"""Fig. 6 + Fig. 7: latency speedup and energy-consumption reduction of ERA
+vs Device-Only / Edge-Only / Neurosurgeon / DNN-Surgery / IAO / DINA on the
+paper's three chain-topology CNNs (normalised to Device-Only)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (MODELS, default_q, emit, mean_e, mean_t,
+                               scenario, solve_era, timed)
+from repro.core import baselines, profiles
+
+
+def run(quick=False):
+    scn = scenario()
+    q = default_q(scn)
+    models = MODELS[:2] if quick else MODELS
+    for model in models:
+        prof = profiles.get_profile(model)
+        era_out, us = timed(solve_era, scn, prof, q)
+        bl = baselines.run_all(scn, prof, q)
+        dev_t, dev_e = mean_t(bl["device_only"]), mean_e(bl["device_only"])
+        emit(f"fig06.latency_speedup.{model}.era", us,
+             f"{dev_t / mean_t(era_out):.2f}x")
+        emit(f"fig07.energy_reduction.{model}.era", us,
+             f"{dev_e / max(mean_e(era_out), 1e-12):.2f}x")
+        for name, out in bl.items():
+            if name == "device_only":
+                continue
+            emit(f"fig06.latency_speedup.{model}.{name}", 0.0,
+                 f"{dev_t / mean_t(out):.2f}x")
+            emit(f"fig07.energy_reduction.{model}.{name}", 0.0,
+                 f"{dev_e / max(mean_e(out), 1e-12):.2f}x")

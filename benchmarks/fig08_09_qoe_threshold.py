@@ -1,0 +1,32 @@
+"""Fig. 8 + Fig. 9: ERA latency speedup / energy reduction under different
+QoE thresholds (the paper sweeps the threshold from 98% down to 88%; we
+scale the per-user latency budget Q accordingly — tighter Q forces more
+resources, looser Q saves energy)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import (MODELS, emit, mean_e, mean_t, scenario,
+                               solve_era, timed)
+from repro.core import baselines, profiles
+
+FRACS = (0.98, 0.93, 0.88)
+
+
+def run(quick=False):
+    scn = scenario()
+    models = MODELS[:1] if quick else MODELS
+    base_q = 0.5
+    for model in models:
+        prof = profiles.get_profile(model)
+        dev = baselines.device_only(scn, prof,
+                                    jnp.full((scn.cfg.n_users,), base_q))
+        for frac in (FRACS[:2] if quick else FRACS):
+            # threshold fraction -> latency budget: tighter threshold means
+            # less slack over the nominal budget
+            q = jnp.full((scn.cfg.n_users,), base_q * (2.0 - frac))
+            out, us = timed(solve_era, scn, prof, q)
+            emit(f"fig08.latency_speedup.{model}.q{int(frac*100)}", us,
+                 f"{mean_t(dev) / mean_t(out):.2f}x")
+            emit(f"fig09.energy_reduction.{model}.q{int(frac*100)}", 0.0,
+                 f"{mean_e(dev) / max(mean_e(out), 1e-12):.2f}x")

@@ -1,0 +1,28 @@
+"""Fig. 10 + Fig. 11: number of users whose inference delay exceeds the
+expected task finish time, and the summed exceedance (DCT), as the expected
+finish time grows."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import MODELS, emit, scenario, solve_era, timed
+from repro.core import profiles, qoe
+
+FINISH_TIMES = (0.1, 0.2, 0.4, 0.8)
+
+
+def run(quick=False):
+    scn = scenario()
+    u = scn.cfg.n_users
+    models = MODELS[:1] if quick else MODELS
+    for model in models:
+        prof = profiles.get_profile(model)
+        for q_s in (FINISH_TIMES[::2] if quick else FINISH_TIMES):
+            q = jnp.full((u,), q_s)
+            out, us = timed(solve_era, scn, prof, q)
+            n_over, sum_over = qoe.violations(out.terms.t, q)
+            emit(f"fig10.users_over.{model}.q{int(q_s*1e3)}ms", us,
+                 f"{float(n_over)/u:.2f}N")
+            emit(f"fig11.sum_dct.{model}.q{int(q_s*1e3)}ms", 0.0,
+                 f"{float(sum_over)*1e3:.1f}ms")

@@ -1,0 +1,31 @@
+"""Fig. 12 + Fig. 13: QoE violations and average exceedance vs baselines as
+a function of the finish-time threshold (x-axis = multiple of the average
+task finish time, as in the paper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, scenario, solve_era, timed
+from repro.core import baselines, profiles, qoe
+
+MULTIPLES = (0.6, 0.9, 1.2)
+
+
+def run(quick=False):
+    scn = scenario()
+    u = scn.cfg.n_users
+    prof = profiles.get_profile("yolov2")
+    # nominal = ERA's mean latency at a loose budget
+    nominal = float(np.asarray(
+        solve_era(scn, prof, jnp.full((u,), 1.0)).terms.t).mean())
+    for mult in (MULTIPLES[::2] if quick else MULTIPLES):
+        q = jnp.full((u,), nominal * mult)
+        era_out, us = timed(solve_era, scn, prof, q)
+        rows = {"era": era_out, **baselines.run_all(scn, prof, q)}
+        for name, out in rows.items():
+            n_over, sum_over = qoe.violations(out.terms.t, q)
+            emit(f"fig12.users_over.{name}.x{mult}", us if name == "era" else 0.0,
+                 f"{float(n_over)/u:.2f}N")
+            emit(f"fig13.avg_exceed.{name}.x{mult}", 0.0,
+                 f"{float(sum_over)/u/nominal:.2f}x")

@@ -1,0 +1,58 @@
+"""Fig. 14–19: latency speedup and energy reduction under varying network
+conditions — user density (14/17), subchannel count (15/18), and per-user
+workload (16/19). Normalised to Device-Only, as in the paper."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, mean_e, mean_t, scenario, solve_era, timed
+from repro.core import baselines, profiles
+
+DENSITIES = (12, 24, 36)
+SUBCHANNELS = (6, 12, 18)
+WORKLOADS = (1, 2, 3)
+
+
+def _workload_profile(prof, k):
+    return dataclasses.replace(prof, name=f"{prof.name}x{k}",
+                               layer_flops=prof.layer_flops * k,
+                               out_bits=prof.out_bits * k,
+                               input_bits=prof.input_bits * k,
+                               result_bits=prof.result_bits * k)
+
+
+def run(quick=False):
+    prof = profiles.get_profile("yolov2")
+
+    for u in (DENSITIES[:2] if quick else DENSITIES):
+        scn = scenario(n_users=u)
+        q = jnp.full((u,), 0.4)
+        out, us = timed(solve_era, scn, prof, q)
+        dev = baselines.device_only(scn, prof, q)
+        emit(f"fig14.latency_speedup.u{u}", us,
+             f"{mean_t(dev) / mean_t(out):.2f}x")
+        emit(f"fig17.energy_reduction.u{u}", 0.0,
+             f"{mean_e(dev) / max(mean_e(out), 1e-12):.2f}x")
+
+    for m in (SUBCHANNELS[:2] if quick else SUBCHANNELS):
+        scn = scenario(n_subchannels=m)
+        q = jnp.full((scn.cfg.n_users,), 0.4)
+        out, us = timed(solve_era, scn, prof, q)
+        dev = baselines.device_only(scn, prof, q)
+        emit(f"fig15.latency_speedup.m{m}", us,
+             f"{mean_t(dev) / mean_t(out):.2f}x")
+        emit(f"fig18.energy_reduction.m{m}", 0.0,
+             f"{mean_e(dev) / max(mean_e(out), 1e-12):.2f}x")
+
+    scn = scenario()
+    q = jnp.full((scn.cfg.n_users,), 0.6)
+    for k in (WORKLOADS[:2] if quick else WORKLOADS):
+        prof_k = _workload_profile(prof, k)
+        out, us = timed(solve_era, scn, prof_k, q)
+        dev = baselines.device_only(scn, prof_k, q)
+        emit(f"fig16.latency_speedup.k{k}", us,
+             f"{mean_t(dev) / mean_t(out):.2f}x")
+        emit(f"fig19.energy_reduction.k{k}", 0.0,
+             f"{mean_e(dev) / max(mean_e(out), 1e-12):.2f}x")

@@ -1,0 +1,75 @@
+"""Kernel microbenches.
+
+On this CPU container the meaningful wall numbers are the jnp reference
+paths (the Pallas kernels run in interpret mode, which measures the
+emulator, not the TPU); both are reported, interpret-mode timings tagged
+as such."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, n=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick=False):
+    key = jax.random.PRNGKey(0)
+    from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+    b, s, h, kh, d = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
+    ref_fn = jax.jit(lambda q, k, v: fa_ref.attention_ref(q, k, v))
+    us = _time(ref_fn, q, k, v)
+    flops = 4.0 * b * s * s * h * d * 0.5
+    emit("kernel.flash_attention.ref_jnp.1k", us,
+         f"{flops / (us * 1e-6) / 1e9:.1f}GFLOP/s")
+    if not quick:
+        pal = jax.jit(lambda q, k, v: fa_ops.flash_attention(
+            q, k, v, bq=256, bk=256))
+        emit("kernel.flash_attention.interpret.1k", _time(pal, q, k, v),
+             "interpret-mode(correctness-path)")
+
+    from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
+    bt, l, hh, p, n = 1, 1024, 8, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (bt, l, hh, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, l, hh))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (hh,)) * 0.3)
+    bb = jax.random.normal(ks[3], (bt, l, n)) * 0.3
+    cc = jax.random.normal(ks[4], (bt, l, n)) * 0.3
+    dd = jnp.ones((hh,))
+    ref_ssd = jax.jit(lambda *args: ssd_ref.ssd_chunked(*args, chunk=256))
+    emit("kernel.ssd.ref_chunked.1k", _time(ref_ssd, x, dt, a, bb, cc, dd),
+         "oracle-path")
+    if not quick:
+        pal_ssd = jax.jit(lambda *args: ssd_ops.ssd(*args, chunk=256))
+        emit("kernel.ssd.interpret.1k", _time(pal_ssd, x, dt, a, bb, cc, dd),
+             "interpret-mode(correctness-path)")
+
+    from repro.core import network, noma
+    from repro.kernels.noma_rate import ops as nops
+    cfg = network.small_config(n_users=48, n_subchannels=16)
+    scn = network.make_scenario(jax.random.PRNGKey(1), cfg)
+    beta = jnp.full((48, 16), 1.0 / 16)
+    pw = jnp.full((48,), 0.1)
+    core_fn = jax.jit(lambda b, p: noma.uplink_rates(scn, b, p))
+    emit("kernel.noma_rate.core_jnp", _time(core_fn, beta, pw), "autodiff-path")
+    if not quick:
+        kern_fn = jax.jit(lambda b, p: nops.uplink_rates_kernel(
+            scn, b, p, interpret=True))
+        emit("kernel.noma_rate.interpret", _time(kern_fn, beta, pw),
+             "interpret-mode(correctness-path)")

@@ -1,0 +1,26 @@
+"""Corollary 4: Li-GD's loop-iteration warm starts vs cold-start GD —
+iteration counts and wall time per model."""
+from __future__ import annotations
+
+from benchmarks.common import MODELS, default_q, emit, scenario, timed
+from repro.core import ligd, profiles
+
+
+def run(quick=False):
+    scn = scenario()
+    q = default_q(scn)
+    for model in (MODELS[:1] if quick else MODELS):
+        prof = profiles.get_profile(model)
+        warm, us_w = timed(ligd.solve, scn, prof, q, max_steps=400)
+        cold, us_c = timed(ligd.solve, scn, prof, q, max_steps=400,
+                           warm_start=False)
+        emit(f"ligd.warm_iters.{model}", us_w, warm.total_iters)
+        emit(f"ligd.cold_iters.{model}", us_c, cold.total_iters)
+        emit(f"ligd.iter_speedup.{model}", 0.0,
+             f"{cold.total_iters / max(warm.total_iters, 1):.2f}x")
+        # beyond paper: self-adaptive step size (paper §III closing remark)
+        adap, us_a = timed(ligd.solve, scn, prof, q, max_steps=400,
+                           adaptive=True)
+        emit(f"ligd.adaptive_iters.{model}", us_a, adap.total_iters)
+        emit(f"ligd.adaptive_gamma_ratio.{model}", 0.0,
+             f"{float(adap.terms.gamma) / max(float(warm.terms.gamma), 1e-9):.3f}")

@@ -1,0 +1,43 @@
+"""Multi-pod weak scaling from the dry-run artifacts: per-chip roofline
+terms on 16×16 (256 chips) vs 2×16×16 (512 chips).  Training should halve
+per-chip compute/memory (data-parallel across the pod axis) while the
+gradient all-reduce crosses the pod boundary; decode should be ~unchanged
+(requests shard over data, not pod)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+PAIRS = [
+    ("llama3-8b", "train_4k"),
+    ("qwen2-vl-72b", "train_4k"),
+    ("dbrx-132b", "train_4k"),
+    ("mamba2-780m", "train_4k"),
+    ("llama3-8b", "decode_32k"),
+    ("mixtral-8x22b", "prefill_32k"),
+]
+
+
+def run(quick=False):
+    if not DRYRUN.exists():
+        emit("multipod.skipped", 0.0, "no dryrun artifacts")
+        return
+    for arch, shape in (PAIRS[:3] if quick else PAIRS):
+        recs = {}
+        for mesh in ("16x16", "2x16x16"):
+            f = DRYRUN / f"{arch}.{shape}.{mesh}.json"
+            if f.exists():
+                r = json.loads(f.read_text())
+                if r.get("ok"):
+                    recs[mesh] = r["per_chip"]
+        if len(recs) != 2:
+            continue
+        a, b = recs["16x16"], recs["2x16x16"]
+        emit(f"multipod.flops_ratio.{arch}.{shape}", 0.0,
+             f"{b['flops'] / max(a['flops'], 1):.2f}")
+        emit(f"multipod.coll_ratio.{arch}.{shape}", 0.0,
+             f"{b['collective_bytes_total'] / max(a['collective_bytes_total'], 1):.2f}")

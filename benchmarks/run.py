@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  ``--quick`` trims sweeps.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig06]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig06_07", "benchmarks.fig06_07_models"),
+    ("fig08_09", "benchmarks.fig08_09_qoe_threshold"),
+    ("fig10_11", "benchmarks.fig10_11_finish_time"),
+    ("fig12_13", "benchmarks.fig12_13_vs_baselines"),
+    ("fig14_19", "benchmarks.fig14_19_network"),
+    ("ligd", "benchmarks.ligd_convergence"),
+    ("eraplus", "benchmarks.era_plus"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("multipod", "benchmarks.multipod_scaling"),
+    ("online", "benchmarks.online_rescheduling"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on the module tag")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for tag, modname in MODULES:
+        if args.only and args.only not in tag:
+            continue
+        mod = __import__(modname, fromlist=["run"])
+        t1 = time.time()
+        mod.run(quick=args.quick)
+        print(f"# {tag} done in {time.time()-t1:.1f}s", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

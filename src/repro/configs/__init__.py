@@ -1,0 +1,6 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    get_config,
+    get_tiny_config,
+    list_architectures,
+)

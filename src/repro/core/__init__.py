@@ -1,0 +1,3 @@
+# ERA — the paper's primary contribution: QoE-aware split-inference resource
+# allocation for NOMA edge intelligence (utility eqs. 24-27, Li-GD Table I).
+from repro.core import baselines, era, ligd, network, noma, profiles, qoe  # noqa: F401

@@ -1,0 +1,148 @@
+"""Baseline split/offloading algorithms the paper compares against (§V.A):
+
+  Device-Only   — whole model on the device (s = F)
+  Edge-Only     — whole model on the edge (s = 0)
+  Neurosurgeon  — per-user latency-minimal split under fixed, equal resource
+                  allocation [Kang et al., ASPLOS'17]
+  DNN-Surgery   — latency-minimal split + latency-only GD over (p, P, r)
+                  [Liang et al., TCC'23]
+  IAO           — joint split + resource allocation minimising latency and
+                  energy, no QoE term [Tang et al., IoT-J'21]
+  DINA          — adaptive fine-grained offloading heuristic: minimise the
+                  transferred intermediate data, then allocate resources
+                  proportionally to offloaded load [Mohammed et al.,
+                  INFOCOM'20]
+
+All baselines are evaluated through the same ``era.utility`` so comparisons
+are apples-to-apples; none of them sees the QoE term (that is the paper's
+point).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import noma
+from repro.core.era import (Allocation, Terms, Weights, round_beta,
+                            uniform_alloc, utility, delay_terms)
+from repro.core.ligd import _gd_solve
+
+
+class BaselineOutcome(NamedTuple):
+    name: str
+    s: np.ndarray
+    alloc: Allocation
+    terms: Terms
+
+
+def default_alloc(scn, *, power_frac=1.0, r_frac=0.5) -> Allocation:
+    """Fixed allocation used by non-optimising baselines: round-robin
+    least-loaded subchannel per AP (≤ cap users/channel), max power,
+    equal compute share."""
+    cfg = scn.cfg
+    u, m = cfg.n_users, cfg.n_subchannels
+    soft = uniform_alloc(scn)
+    p = jnp.full((u,), cfg.p_min_w + power_frac * (cfg.p_max_w - cfg.p_min_w))
+    p_ap = jnp.full((u,), cfg.ap_p_min_w
+                    + power_frac * (cfg.ap_p_max_w - cfg.ap_p_min_w))
+    r = jnp.full((u,), cfg.r_min + r_frac * (cfg.r_max - cfg.r_min))
+    alloc = Allocation(soft.beta_up, soft.beta_dn, p, p_ap, r)
+    # harden β by best-gain-first greedy (round_beta uses β magnitudes; seed
+    # them with the channel gains so "best channel first" wins)
+    gain_up = scn.own_gain_up()
+    gain_dn = scn.own_gain_dn()
+    alloc = alloc._replace(beta_up=gain_up / gain_up.max(),
+                           beta_dn=gain_dn / gain_dn.max())
+    return round_beta(scn, alloc)
+
+
+def _finish(scn, prof, name, s_user, alloc, q, w) -> BaselineOutcome:
+    feasible = noma.sic_feasible(scn, alloc.beta_up, alloc.p)
+    s_final = jnp.where(feasible, s_user, prof.n_layers)
+    terms = utility(scn, prof, s_final, alloc, q, w)
+    return BaselineOutcome(name, np.asarray(s_final), alloc, terms)
+
+
+def _latency_table(scn, prof, alloc):
+    """(F+1, U) per-user latency for every split under ``alloc``."""
+    u = scn.cfg.n_users
+    rows = []
+    for s in range(prof.n_layers + 1):
+        s_vec = jnp.full((u,), s, jnp.int32)
+        t_dev, t_srv, t_up, t_dn, _, _ = delay_terms(scn, prof, s_vec, alloc)
+        rows.append(t_dev + t_srv + t_up + t_dn)
+    return jnp.stack(rows)
+
+
+def device_only(scn, prof, q, w=Weights()):
+    alloc = default_alloc(scn)
+    s = jnp.full((scn.cfg.n_users,), prof.n_layers, jnp.int32)
+    return _finish(scn, prof, "device_only", s, alloc, q, w)
+
+
+def edge_only(scn, prof, q, w=Weights()):
+    alloc = default_alloc(scn)
+    s = jnp.zeros((scn.cfg.n_users,), jnp.int32)
+    return _finish(scn, prof, "edge_only", s, alloc, q, w)
+
+
+def neurosurgeon(scn, prof, q, w=Weights()):
+    alloc = default_alloc(scn)
+    t = _latency_table(scn, prof, alloc)
+    s = jnp.argmin(t, axis=0).astype(jnp.int32)
+    return _finish(scn, prof, "neurosurgeon", s, alloc, q, w)
+
+
+def dnn_surgery(scn, prof, q, w=Weights(), *, lr=0.05, max_steps=200):
+    """Latency-only: alternate (split pick | GD on p,P,r)."""
+    alloc = default_alloc(scn)
+    w_lat = Weights(w_t=1.0, w_q=0.0, w_r=0.0, t_scale=w.t_scale)
+    s = jnp.argmin(_latency_table(scn, prof, alloc), axis=0).astype(jnp.int32)
+    for _ in range(2):
+        res = _gd_solve(scn, s, q, alloc, lr, 1e-5, max_steps, w_lat, prof)
+        alloc = round_beta(scn, res.alloc)
+        s = jnp.argmin(_latency_table(scn, prof, alloc), axis=0).astype(jnp.int32)
+    return _finish(scn, prof, "dnn_surgery", s, alloc, q, w)
+
+
+def iao(scn, prof, q, w=Weights(), *, lr=0.05, max_steps=300):
+    """Joint partition + allocation on latency+energy (ω_Q = 0)."""
+    from repro.core import ligd
+    w_iao = Weights(w_t=0.5, w_q=0.0, w_r=0.5,
+                    t_scale=w.t_scale, e_scale=w.e_scale,
+                    r_cost_scale=w.r_cost_scale)
+    out = ligd.solve(scn, prof, q, w_iao, lr=lr, max_steps=max_steps)
+    terms = utility(scn, prof, jnp.asarray(out.s), out.alloc, q, w)
+    return BaselineOutcome("iao", out.s, out.alloc, terms)
+
+
+def dina(scn, prof, q, w=Weights()):
+    """Min-transfer heuristic: split at the global minimum of crossing bytes,
+    compute share proportional to offloaded FLOPs."""
+    cfg = scn.cfg
+    alloc = default_alloc(scn)
+    u = cfg.n_users
+    s_star = int(jnp.argmin(prof.uplink_bits[:-1]))  # never device-only
+    s = jnp.full((u,), s_star, jnp.int32)
+    edge_share = prof.edge_flops[s]
+    r = cfg.r_min + (cfg.r_max - cfg.r_min) * edge_share / jnp.maximum(
+        jnp.max(edge_share), 1.0)
+    alloc = alloc._replace(r=r)
+    return _finish(scn, prof, "dina", s, alloc, q, w)
+
+
+ALL_BASELINES = {
+    "device_only": device_only,
+    "edge_only": edge_only,
+    "neurosurgeon": neurosurgeon,
+    "dnn_surgery": dnn_surgery,
+    "iao": iao,
+    "dina": dina,
+}
+
+
+def run_all(scn, prof, q, w=Weights()):
+    return {name: fn(scn, prof, q, w) for name, fn in ALL_BASELINES.items()}

@@ -1,0 +1,211 @@
+"""NOMA edge-intelligence network scenario generator (paper §II, §V.A).
+
+Generates a deterministic multi-cell scenario: N APs, U users, M orthogonal
+subchannels, Rayleigh-faded distance-attenuated channel gains for uplink and
+downlink, nearest-AP association, and the static SIC decode orderings that
+eq. (5)/(8) need (descending gain within a cell for uplink, ascending for
+downlink).  Everything is a JAX array so the whole ERA loop jits.
+
+Paper defaults (§V.A): N=5, U=1250, M=250, B=10 MHz, p_max=25 dBm, path-loss
+exponent 5, noise PSD -174 dBm/Hz, 1e4 cycles/bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    n_users: int = 1250
+    n_aps: int = 5
+    n_subchannels: int = 250
+    area_m: float = 500.0                 # square side
+    bandwidth_hz: float = 10e6            # total B (shared up/down per paper)
+    noise_psd_dbm_hz: float = -174.0
+    path_loss_exp: float = 5.0            # paper value
+    ref_distance_m: float = 1.0
+    p_min_w: float = 0.01                 # device tx power bounds
+    p_max_w: float = 0.316                # 25 dBm
+    ap_p_min_w: float = 0.1               # AP per-user component bounds
+    ap_p_max_w: float = 2.0
+    sic_threshold_w: float = 1e-13        # I_n^m decode threshold (p·|h|²)
+    max_users_per_channel: int = 3        # paper: ≤3 devices per subchannel
+    # compute model
+    c_device_flops: float = 2e9           # device capability c_i (~mobile)
+    c_min_flops: float = 2.5e10           # edge minimal resource unit c_min
+    r_min: float = 1.0
+    r_max: float = 64.0
+    lambda_exponent: float = 0.85         # λ(r) = r^a (TPU adaptation, DESIGN.md)
+    cycles_per_bit: float = 1e4           # φ
+    # ξ: effective switched capacitance, calibrated so P = ξc³ gives ~2 W
+    # mobile and ~200 W per fully-allocated edge slice (E = ξ c² f, eq. 18/21)
+    xi_device: float = 1.6e-29
+    xi_edge: float = 3e-34
+
+    @property
+    def subchannel_bw(self) -> float:
+        return self.bandwidth_hz / self.n_subchannels
+
+    @property
+    def noise_w(self) -> float:
+        return 10 ** (self.noise_psd_dbm_hz / 10.0) * 1e-3 * self.subchannel_bw
+
+
+@dataclass
+class Scenario:
+    """Static per-episode channel state + precomputed SIC orderings.
+
+    Registered as a JAX pytree (cfg is static aux data) so scenarios can be
+    passed straight through jit/grad."""
+    cfg: NetworkConfig
+    assoc: jnp.ndarray           # (U,)  serving AP index
+    h_up: jnp.ndarray            # (U, N, M) uplink |h|² user->AP
+    h_dn: jnp.ndarray            # (N, U, M) downlink |H|² AP->user
+    # SIC orderings (static: depend on gains only)
+    up_order: jnp.ndarray        # (M, U) user indices: grouped by AP,
+    #                             descending own-AP gain (uplink SIC order)
+    up_group_end: jnp.ndarray    # (M, U) index (into sorted axis) of the last
+    #                             member of this position's AP group
+    dn_order: jnp.ndarray        # (M, U) grouped by AP, ascending gain
+    dn_group_end: jnp.ndarray    # (M, U)
+
+    @property
+    def n_users(self):
+        return int(self.assoc.shape[0])
+
+    def own_gain_up(self):
+        """(U, M) gain to the serving AP."""
+        return jnp.take_along_axis(
+            self.h_up, self.assoc[:, None, None], axis=1)[:, 0, :]
+
+    def own_gain_dn(self):
+        """(U, M) downlink gain from the serving AP."""
+        return jnp.take_along_axis(
+            jnp.swapaxes(self.h_dn, 0, 1), self.assoc[:, None, None],
+            axis=1)[:, 0, :]
+
+
+_SCN_FIELDS = ("assoc", "h_up", "h_dn", "up_order", "up_group_end",
+               "dn_order", "dn_group_end")
+
+
+def _scn_flatten(s):
+    return tuple(getattr(s, f) for f in _SCN_FIELDS), s.cfg
+
+
+def _scn_unflatten(cfg, children):
+    return Scenario(cfg, *children)
+
+
+jax.tree_util.register_pytree_node(Scenario, _scn_flatten, _scn_unflatten)
+
+
+def _orderings(own_gain: np.ndarray, assoc: np.ndarray, descending: bool):
+    """Per-subchannel sort grouped by AP, plus end-of-group pointers."""
+    u, m = own_gain.shape
+    order = np.empty((m, u), np.int32)
+    group_end = np.empty((m, u), np.int32)
+    sign = -1.0 if descending else 1.0
+    for ch in range(m):
+        # lexsort: primary assoc, secondary gain
+        idx = np.lexsort((sign * own_gain[:, ch], assoc))
+        order[ch] = idx
+        g = assoc[idx]
+        # last index of each group, broadcast to members
+        end = np.zeros(u, np.int32)
+        last = u - 1
+        for i in range(u - 1, -1, -1):
+            if i < u - 1 and g[i] != g[i + 1]:
+                last = i
+            end[i] = last
+        group_end[ch] = end
+    return order, group_end
+
+
+def make_scenario(key, cfg: NetworkConfig) -> Scenario:
+    """Deterministic scenario from a PRNG key."""
+    ku, ka, kf_up, kf_dn = jax.random.split(key, 4)
+    users = jax.random.uniform(ku, (cfg.n_users, 2), minval=0.0,
+                               maxval=cfg.area_m)
+    # APs on a jittered grid for coverage
+    g = int(np.ceil(np.sqrt(cfg.n_aps)))
+    grid = np.stack(np.meshgrid(np.linspace(0.15, 0.85, g),
+                                np.linspace(0.15, 0.85, g)),
+                    -1).reshape(-1, 2)[: cfg.n_aps] * cfg.area_m
+    aps = jnp.asarray(grid, jnp.float32)
+
+    d = jnp.linalg.norm(users[:, None, :] - aps[None, :, :], axis=-1)
+    d = jnp.maximum(d, cfg.ref_distance_m)
+    path_loss = d ** (-cfg.path_loss_exp)          # (U, N)
+    assoc = jnp.argmin(d, axis=1).astype(jnp.int32)  # nearest-AP policy
+
+    # iid Rayleigh fading per subchannel: |h|² ~ Exp(1) × path loss
+    fade_up = jax.random.exponential(kf_up, (cfg.n_users, cfg.n_aps,
+                                             cfg.n_subchannels))
+    fade_dn = jax.random.exponential(kf_dn, (cfg.n_aps, cfg.n_users,
+                                             cfg.n_subchannels))
+    h_up = path_loss[:, :, None] * fade_up
+    h_dn = jnp.swapaxes(path_loss, 0, 1)[:, :, None] * fade_dn
+
+    assoc_np = np.asarray(assoc)
+    own_up = np.asarray(jnp.take_along_axis(
+        h_up, assoc[:, None, None], axis=1)[:, 0, :])
+    own_dn = np.asarray(jnp.take_along_axis(
+        jnp.swapaxes(h_dn, 0, 1), assoc[:, None, None], axis=1)[:, 0, :])
+
+    up_order, up_group_end = _orderings(own_up, assoc_np, descending=True)
+    dn_order, dn_group_end = _orderings(own_dn, assoc_np, descending=False)
+
+    return Scenario(
+        cfg=cfg, assoc=assoc,
+        h_up=h_up, h_dn=h_dn,
+        up_order=jnp.asarray(up_order), up_group_end=jnp.asarray(up_group_end),
+        dn_order=jnp.asarray(dn_order), dn_group_end=jnp.asarray(dn_group_end),
+    )
+
+
+def evolve_scenario(scn: Scenario, key, rho: float = 0.9) -> Scenario:
+    """Gauss-Markov channel drift: fade' = ρ·fade + (1-ρ)·fresh (unit-mean
+    exponential), positions/association fixed.  SIC orderings are recomputed
+    (they depend on the gains).  Models the paper's 'dynamic environment'
+    (§III.A) for online re-scheduling experiments."""
+    cfg = scn.cfg
+    k_up, k_dn = jax.random.split(key)
+    fresh_up = jax.random.exponential(k_up, scn.h_up.shape)
+    fresh_dn = jax.random.exponential(k_dn, scn.h_dn.shape)
+    h_up = rho * scn.h_up + (1 - rho) * fresh_up * jnp.mean(
+        scn.h_up, axis=-1, keepdims=True)
+    h_dn = rho * scn.h_dn + (1 - rho) * fresh_dn * jnp.mean(
+        scn.h_dn, axis=-1, keepdims=True)
+
+    assoc_np = np.asarray(scn.assoc)
+    own_up = np.asarray(jnp.take_along_axis(
+        h_up, scn.assoc[:, None, None], axis=1)[:, 0, :])
+    own_dn = np.asarray(jnp.take_along_axis(
+        jnp.swapaxes(h_dn, 0, 1), scn.assoc[:, None, None], axis=1)[:, 0, :])
+    up_order, up_group_end = _orderings(own_up, assoc_np, descending=True)
+    dn_order, dn_group_end = _orderings(own_dn, assoc_np, descending=False)
+    return Scenario(
+        cfg=cfg, assoc=scn.assoc, h_up=h_up, h_dn=h_dn,
+        up_order=jnp.asarray(up_order), up_group_end=jnp.asarray(up_group_end),
+        dn_order=jnp.asarray(dn_order), dn_group_end=jnp.asarray(dn_group_end),
+    )
+
+
+def small_config(**overrides) -> NetworkConfig:
+    """CPU-friendly scenario used by tests/benchmarks (paper-scale is the
+    default NetworkConfig).
+
+    Calibration notes (EXPERIMENTS.md): bandwidth raised to 40 MHz (5G-like)
+    and a 200 m cell so that per-user NOMA rates land at ~10–30 Mbps — with
+    the paper's literal 10 MHz/250-subchannel setting every strategy is
+    radio-bound at Mb-scale intermediates and the split decision degenerates."""
+    base = dict(n_users=36, n_aps=4, n_subchannels=12, area_m=200.0,
+                bandwidth_hz=40e6)
+    base.update(overrides)
+    return NetworkConfig(**base)

@@ -1,0 +1,112 @@
+"""NOMA uplink/downlink SINR and achievable rates (paper eqs. 5–11).
+
+SIC semantics:
+  uplink (eq. 5): the AP decodes stronger users first, so user i sees
+    intra-cell interference from same-cell users with LOWER gain on the same
+    subchannel, plus inter-cell interference from every user on that channel
+    in other cells.
+  downlink (eq. 8): weaker users decode first, so user i sees interference
+    from the power components of same-cell users with HIGHER gain, plus other
+    APs' total transmit power on the channel.
+
+Subchannel assignment is the relaxed β ∈ [0,1]^{U×M} of the paper
+(Corollary 1); rates are Σ_m β_im · (B/M)·log2(1+SINR_im).
+
+The sorted-cumsum trick: SIC orderings depend only on channel gains, which
+are static per scenario, so ``Scenario`` precomputes per-channel user
+orderings grouped by AP; interference is then an (exclusive) suffix sum over
+the sorted contributions — O(U·M), no U×U pairwise tensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _suffix_interference(contrib_sorted, group_end):
+    """contrib_sorted: (M, U) sorted per SIC order. Returns, per position i,
+    the sum of contributions of positions (i, group_end[i]] — i.e. same-cell
+    users decoded after i."""
+    cs = jnp.cumsum(contrib_sorted, axis=1)
+    end_cs = jnp.take_along_axis(cs, group_end, axis=1)
+    return end_cs - cs
+
+
+def uplink_sinr(scn, beta_up, p):
+    """beta_up (U, M) in [0,1]; p (U,) watts. Returns SINR (U, M)."""
+    cfg = scn.cfg
+    own = scn.own_gain_up()                       # (U, M)
+    contrib = beta_up * p[:, None] * own          # (U, M) β·p·|h|²
+
+    # intra-cell: suffix sums along the static SIC order
+    c_sorted = jnp.take_along_axis(contrib.T, scn.up_order, axis=1)  # (M, U)
+    intra_sorted = _suffix_interference(c_sorted, scn.up_group_end)
+    intra = jnp.zeros_like(c_sorted).at[
+        jnp.arange(c_sorted.shape[0])[:, None], scn.up_order
+    ].set(intra_sorted).T                          # back to (U, M)
+
+    # inter-cell: total received at AP n from users of other cells
+    # T[n, m] = Σ_u β·p·h_up[u, n, m]  minus own-cell contributions
+    t_all = jnp.einsum("um,unm->nm", beta_up * p[:, None], scn.h_up)
+    own_cell = jax.ops.segment_sum(contrib, scn.assoc,
+                                   num_segments=cfg.n_aps)   # (N, M)
+    # clamp: t_all - own_cell cancels catastrophically when one cell holds
+    # every user on a channel; f32 residue (~1e-13 W) can exceed the noise
+    # floor and flip the SINR sign
+    t_other = jnp.maximum(t_all - own_cell, 0.0)
+    inter = t_other[scn.assoc]                     # (U, M)
+
+    sig = p[:, None] * own
+    return sig / (jnp.maximum(intra, 0.0) + inter + cfg.noise_w)
+
+
+def downlink_sinr(scn, beta_dn, p_ap):
+    """beta_dn (U, M); p_ap (U,) watts (per-user power component at its AP)."""
+    cfg = scn.cfg
+    own = scn.own_gain_dn()                        # (U, M)
+    # intra-cell: components for stronger users, all through user i's gain.
+    # The paper's eq. (8) weights each component by the interferer's gain; we
+    # follow the standard formulation sum_q β_q P_q · |H_i|² (all signals
+    # reach user i through its own channel), which matches eq. (8)'s intent.
+    comp = beta_dn * p_ap[:, None]                 # (U, M) power components
+    c_sorted = jnp.take_along_axis(comp.T, scn.dn_order, axis=1)
+    intra_sorted = _suffix_interference(c_sorted, scn.dn_group_end)
+    intra_pwr = jnp.zeros_like(c_sorted).at[
+        jnp.arange(c_sorted.shape[0])[:, None], scn.dn_order
+    ].set(intra_sorted).T
+    intra = intra_pwr * own
+
+    # inter-cell: other APs' total power through the cross gain h_dn[x, i, m]
+    ap_power = jax.ops.segment_sum(comp, scn.assoc,
+                                   num_segments=cfg.n_aps)   # (N, M)
+    cross = jnp.einsum("nm,num->um", ap_power, scn.h_dn)
+    own_ap = ap_power[scn.assoc] * own
+    inter = jnp.maximum(cross - own_ap, 0.0)       # see uplink clamp note
+
+    sig = p_ap[:, None] * own
+    return sig / (jnp.maximum(intra, 0.0) + inter + cfg.noise_w)
+
+
+def rates(scn, beta, sinr, bandwidth=None):
+    """Σ_m β·(B/M)·log2(1+SINR) per user. Returns (U,) bits/s."""
+    bw = scn.cfg.subchannel_bw if bandwidth is None else bandwidth
+    per_ch = bw * jnp.log2(1.0 + sinr)
+    return jnp.sum(beta * per_ch, axis=1)
+
+
+def uplink_rates(scn, beta_up, p):
+    return rates(scn, beta_up, uplink_sinr(scn, beta_up, p))
+
+
+def downlink_rates(scn, beta_dn, p_ap):
+    return rates(scn, beta_dn, downlink_sinr(scn, beta_dn, p_ap))
+
+
+def sic_feasible(scn, beta_up, p):
+    """Uplink SIC decode-threshold constraint p·|h|² > I (paper §II.B):
+    users failing it must run device-only.  Evaluated on the hard-assigned
+    channel (argmax β)."""
+    own = scn.own_gain_up()
+    ch = jnp.argmax(beta_up, axis=1)
+    gain = jnp.take_along_axis(own, ch[:, None], axis=1)[:, 0]
+    return p * gain > scn.cfg.sic_threshold_w

@@ -1,0 +1,230 @@
+"""Per-layer model split profiles: FLOPs per layer, intermediate activation
+bytes per candidate split point, input/result sizes (paper §II.A Fig. 4).
+
+Split semantics (s ∈ {0..F}; paper's s_1..s_F maps to F..0 reversed):
+  device computes layers 1..s, edge computes s+1..F.
+  s = 0  -> edge-only  (uplink carries the raw input)
+  s = F  -> device-only (nothing crosses the radio)
+  else   -> uplink carries out_bits[s-1] (output of layer s)
+
+Profiles for the paper's own CNN benchmarks (NiN / tiny-YOLOv2 / VGG16) are
+built from published layer shapes; profiles for the 10 assigned transformer
+architectures derive analytically from their ModelConfig (per-block FLOPs +
+residual-stream bytes (+ recurrent-state bytes for rec/ssd blocks), one split
+point per block boundary).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SplitProfile:
+    name: str
+    layer_flops: jnp.ndarray     # (F,) FLOPs of layer i (1-indexed at i-1)
+    out_bits: jnp.ndarray        # (F,) bits leaving layer i
+    input_bits: float            # raw input size (edge-only uplink)
+    result_bits: float           # final-result downlink size m_i
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.layer_flops.shape[0])
+
+    def __hash__(self):  # pytree aux-compatible identity
+        return hash((self.name, int(self.layer_flops.shape[0])))
+
+    # ---- split-indexed tables (length F+1, index = s) ----
+    @property
+    def device_flops(self):
+        return jnp.concatenate([jnp.zeros(1), jnp.cumsum(self.layer_flops)])
+
+    @property
+    def edge_flops(self):
+        total = jnp.sum(self.layer_flops)
+        return total - self.device_flops
+
+    @property
+    def uplink_bits(self):
+        w = jnp.concatenate([jnp.asarray([self.input_bits]), self.out_bits])
+        return w.at[-1].set(0.0)  # device-only: nothing uplinked
+
+    @property
+    def downlink_bits(self):
+        f = self.n_layers
+        d = jnp.full((f + 1,), self.result_bits)
+        return d.at[-1].set(0.0)  # device-only: result already local
+
+
+def _prof_flatten(p):
+    return ((p.layer_flops, p.out_bits),
+            (p.name, p.input_bits, p.result_bits))
+
+
+def _prof_unflatten(aux, children):
+    return SplitProfile(aux[0], children[0], children[1], aux[1], aux[2])
+
+
+jax.tree_util.register_pytree_node(SplitProfile, _prof_flatten, _prof_unflatten)
+
+
+# --------------------------------------------------------------------------- #
+# CNN profiles (the paper's benchmark models)
+# --------------------------------------------------------------------------- #
+def _conv(h, w, cin, cout, k, stride=1, pool=False):
+    """Returns (out_h, out_w, cout, flops, out_activations)."""
+    oh, ow = h // stride, w // stride
+    flops = 2.0 * oh * ow * cout * cin * k * k
+    if pool:
+        oh, ow = oh // 2, ow // 2
+        flops += oh * ow * cout * 4  # pooling compares
+    return oh, ow, cout, flops, oh * ow * cout
+
+
+def _chain(name, input_hw, cin, spec, result_bits=32 * 10, act_bits=16):
+    """spec: list of (cout, k, stride, pool)."""
+    h = w = input_hw
+    c = cin
+    flops_l, out_l = [], []
+    for cout, k, stride, pool in spec:
+        h, w, c, fl, act = _conv(h, w, c, cout, k, stride, pool)
+        flops_l.append(fl)
+        out_l.append(act * act_bits)
+    input_bits = input_hw * input_hw * cin * 8  # 8-bit raw image
+    return SplitProfile(
+        name=name,
+        layer_flops=jnp.asarray(flops_l, jnp.float32),
+        out_bits=jnp.asarray(out_l, jnp.float32),
+        input_bits=float(input_bits),
+        result_bits=float(result_bits),
+    )
+
+
+def nin_profile():
+    """NiN, 9 conv layers.  The paper trains on CIFAR-10 but a 32×32 input
+    makes the raw image smaller than every intermediate activation, which
+    collapses the split decision to edge-only; we profile at 224×224
+    (Neurosurgeon's setting) so the split landscape is non-trivial —
+    deviation recorded in EXPERIMENTS.md."""
+    spec = [
+        (192, 5, 1, False), (160, 1, 1, False), (96, 1, 1, True),
+        (192, 5, 1, False), (192, 1, 1, False), (192, 1, 1, True),
+        (192, 3, 1, False), (192, 1, 1, False), (10, 1, 1, True),
+    ]
+    return _chain("nin", 224, 3, spec)
+
+
+def yolov2_profile():
+    """tiny-YOLOv2 backbone at its native 416×416 (9 conv + pools => 16ish
+    split points in the paper's Fig. 4; we expose the 9 conv outputs +
+    pooled variants folded into each conv layer)."""
+    spec = [
+        (16, 3, 1, True), (32, 3, 1, True), (64, 3, 1, True),
+        (128, 3, 1, True), (256, 3, 1, True), (512, 3, 1, True),
+        (1024, 3, 1, False), (1024, 3, 1, False), (125, 1, 1, False),
+    ]
+    return _chain("yolov2", 416, 3, spec, result_bits=13 * 13 * 125 * 16)
+
+
+def vgg16_profile():
+    """VGG16 conv stack at 224×224 (see nin_profile note)."""
+    spec = [
+        (64, 3, 1, False), (64, 3, 1, True),
+        (128, 3, 1, False), (128, 3, 1, True),
+        (256, 3, 1, False), (256, 3, 1, False), (256, 3, 1, True),
+        (512, 3, 1, False), (512, 3, 1, False), (512, 3, 1, True),
+        (512, 3, 1, False), (512, 3, 1, False), (512, 3, 1, True),
+    ]
+    return _chain("vgg16", 224, 3, spec)
+
+
+CNN_PROFILES = {
+    "nin": nin_profile,
+    "yolov2": yolov2_profile,
+    "vgg16": vgg16_profile,
+}
+
+
+# --------------------------------------------------------------------------- #
+# transformer profiles from ModelConfig
+# --------------------------------------------------------------------------- #
+def block_flops(cfg, spec, seq):
+    """Analytic forward FLOPs of one block on ``seq`` tokens."""
+    mixer, ffn_kind = spec
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    fl = 0.0
+    if mixer in ("attn", "local"):
+        h, k = cfg.n_heads, cfg.n_kv_heads
+        fl += 2.0 * seq * d * (h + 2 * k) * hd          # qkv proj
+        ctx = min(seq, cfg.window) if mixer == "local" else seq
+        fl += 2.0 * 2.0 * seq * ctx * h * hd * 0.5      # scores+values, causal
+        fl += 2.0 * seq * h * hd * d                    # out proj
+    elif mixer == "rec":
+        dr = cfg.resolved_d_rnn
+        fl += 2.0 * seq * d * dr * 3                    # rec/gate/out proj
+        fl += 2.0 * seq * dr * dr * 2                   # gates
+        fl += seq * dr * cfg.conv_width * 2
+    elif mixer == "ssd":
+        di, n, hh = cfg.d_inner, cfg.d_state, cfg.n_ssd_heads
+        p = cfg.ssd_head_dim
+        fl += 2.0 * seq * d * (2 * di + 2 * n + hh)     # in proj
+        fl += 2.0 * seq * di * d                        # out proj
+        q = min(cfg.ssd_chunk, seq)
+        fl += 2.0 * seq * q * n + 2.0 * seq * q * hh * p  # intra-chunk
+        fl += 4.0 * seq * hh * p * n                    # states in/out
+    if ffn_kind == "dense":
+        mult = 3 if cfg.activation in ("silu", "geglu") else 2
+        fl += 2.0 * seq * d * cfg.d_ff * mult
+    elif ffn_kind == "moe":
+        mult = 3 if cfg.activation in ("silu", "geglu") else 2
+        fl += 2.0 * seq * d * cfg.d_ff * mult * cfg.top_k
+        fl += 2.0 * seq * d * cfg.n_experts             # router
+    return fl
+
+
+def transformer_profile(cfg, seq=128, batch=1, act_bits=16) -> SplitProfile:
+    """Split profile for a per-user inference request of ``seq`` tokens.
+
+    Each block boundary is a split point; the crossing tensor is the
+    residual stream (B,S,d) plus any recurrent state (rec: d_rnn; ssd:
+    H·P·N f32)."""
+    specs = cfg.layer_specs
+    flops_l = [batch * block_flops(cfg, sp, seq) for sp in specs]
+
+    stream_bits = batch * seq * cfg.d_model * act_bits
+    out_l = []
+    for mixer, _ in specs:
+        extra = 0.0
+        if mixer == "rec":
+            extra = batch * cfg.resolved_d_rnn * 32.0
+        elif mixer == "ssd":
+            extra = batch * cfg.n_ssd_heads * cfg.ssd_head_dim * cfg.d_state * 32.0
+        out_l.append(stream_bits + extra)
+
+    # endpoints: raw input = token ids (tiny) or patch/frame embeddings
+    if cfg.vision_tokens:
+        input_bits = batch * (cfg.vision_tokens * cfg.d_model * act_bits
+                              + seq * 32.0)
+    elif cfg.n_codebooks > 1:
+        input_bits = batch * seq * cfg.n_codebooks * 32.0
+    else:
+        input_bits = batch * seq * 32.0
+    result_bits = batch * cfg.n_codebooks * 32.0  # one sampled token (id)
+
+    return SplitProfile(
+        name=cfg.name,
+        layer_flops=jnp.asarray(flops_l, jnp.float32),
+        out_bits=jnp.asarray(out_l, jnp.float32),
+        input_bits=float(input_bits),
+        result_bits=float(result_bits),
+    )
+
+
+def get_profile(name: str, **kw) -> SplitProfile:
+    if name in CNN_PROFILES:
+        return CNN_PROFILES[name]()
+    from repro.configs import get_config
+    return transformer_profile(get_config(name), **kw)

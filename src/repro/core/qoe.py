@@ -1,0 +1,54 @@
+"""QoE model (paper §II.C, eqs. 13–17).
+
+Per-user QoE is a sigmoid of inference latency relative to the user's
+threshold Q_i (the "Acceptable QoE" knee S2 of Fig. 1):
+
+    R(x) = 1 / (1 + exp(-a (x - 1))),  x = T_i / Q_i
+
+Delayed completion time (DCT):  C_i = (T_i − Q_i)·R(x)   (smooth eq. 14)
+System metrics: C = Σ C_i (eq. 16), z = Σ R_i (eq. 17 — expected count of
+users whose DCT > 0).  ``round_indicator`` applies the paper's 1/2 rounding
+rule used after optimization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_A = 50.0  # sigmoid sharpness; paper uses up to a=2000
+
+
+def indicator(t, q, a=DEFAULT_A):
+    """R_i(x) — smooth 'deadline exceeded' indicator, (…,) -> (…,).
+
+    Uses jax.nn.sigmoid (stable in f32 — the literal 1/(1+e^{-a(x-1)}) of
+    eq. 15 overflows under XLA rewrites for x ≪ 1 at large a)."""
+    x = t / q
+    return jax.nn.sigmoid(a * (x - 1.0))
+
+
+def dct(t, q, a=DEFAULT_A):
+    """Smooth delayed-completion time C'_i (eq. 14)."""
+    return (t - q) * indicator(t, q, a)
+
+
+def dct_exact(t, q):
+    """Discrete C_i (eq. 13) — used for evaluation/metrics, not GD."""
+    return jnp.maximum(t - q, 0.0)
+
+
+def system_qoe(t, q, a=DEFAULT_A):
+    """Returns (C, z): summed smooth DCT and expected violating-user count."""
+    r = indicator(t, q, a)
+    return jnp.sum((t - q) * r), jnp.sum(r)
+
+
+def round_indicator(r):
+    """Paper's approximation rule: R < 1/2 -> 0 else 1."""
+    return (r > 0.5).astype(jnp.float32)
+
+
+def violations(t, q):
+    """Hard metrics for evaluation: (#users with T>Q, Σ max(T-Q, 0))."""
+    over = t > q
+    return jnp.sum(over), jnp.sum(jnp.where(over, t - q, 0.0))

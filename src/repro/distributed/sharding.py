@@ -1,0 +1,291 @@
+"""Sharding rules mapping model parameters / activations / caches onto the
+production mesh (data, model[, pod]).
+
+Strategy (DESIGN.md §5):
+  * Megatron tensor parallelism on the ``model`` axis: attention heads,
+    FFN hidden dim, MoE expert hidden dim, vocab, Mamba inner dim, RG-LRU
+    recurrent dim.  Archs whose head count does not divide the axis
+    (gemma-2b 8H, recurrentgemma 10H) replicate attention and shard FFN.
+  * ``train`` mode additionally shards a second large dim per tensor on the
+    fsdp axes (ZeRO-3 storage; XLA all-gathers at use) and stores
+    activations sequence-parallel between blocks.
+  * ``serve`` mode: tensor parallel only for ≤8 GiB/chip models, 2-D
+    (model × data) weight sharding for the big ones (dbrx, mixtral, qwen).
+  * MoE experts: tensor-parallel over d_ff by default; ``expert_parallel``
+    shards the expert dim over ``model`` instead (all-to-all dispatch) —
+    used by the perf iterations.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def _axis_size(mesh, name):
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def _div(n, mesh, axis):
+    return axis is not None and n % _axis_size(mesh, axis) == 0
+
+
+class ShardingRules:
+    """Resolves PartitionSpecs for a (cfg, mesh, mode) triple."""
+
+    def __init__(self, cfg, mesh, mode="train", fsdp_axes=None,
+                 expert_parallel=False, seq_parallel=True):
+        assert mode in ("train", "serve")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.mode = mode
+        self.expert_parallel = expert_parallel
+        self.seq_parallel = seq_parallel
+        if fsdp_axes is None:
+            fsdp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        self.fsdp = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+        self.fsdp_axis = self.fsdp if len(self.fsdp) > 1 else (
+            self.fsdp[0] if self.fsdp else None)
+        self.data_axis = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    # -------------------------------------------------------------- #
+    def _fsdp_dim(self, shape, spec, skip=()):
+        """Pick the largest still-unsharded dim divisible by the fsdp axes."""
+        if self.mode != "train" or self.fsdp_axis is None:
+            return spec
+        cands = [(d, i) for i, d in enumerate(shape)
+                 if spec[i] is None and i not in skip
+                 and _div(d, self.mesh, self.fsdp_axis)]
+        if not cands:
+            return spec
+        _, i = max(cands)
+        out = list(spec)
+        out[i] = self.fsdp_axis
+        return tuple(out)
+
+    def param_spec(self, path: str, shape) -> P:
+        """path: '/'-joined key names (unit-stack leading axis already
+        stripped by the caller passing stacked=True semantics in shape)."""
+        cfg, mesh = self.cfg, self.mesh
+        name = path.split("/")[-1]
+        spec = [None] * len(shape)
+
+        def set_dim(i, axis):
+            if _div(shape[i], mesh, axis):
+                spec[i] = axis
+                return True
+            return False
+
+        heads_ok = _div(cfg.n_heads, mesh, MODEL_AXIS) if cfg.n_heads else False
+        kv_ok = _div(cfg.n_kv_heads, mesh, MODEL_AXIS) if cfg.n_kv_heads else False
+
+        if name in ("embed", "lm_head"):
+            # vocab dim = the dim matching padded_vocab
+            for i, d in enumerate(shape):
+                if d == cfg.padded_vocab:
+                    set_dim(i, MODEL_AXIS)
+                    break
+        elif name == "wq":
+            if heads_ok:
+                set_dim(len(shape) - 2, MODEL_AXIS)
+            else:
+                set_dim(len(shape) - 3, MODEL_AXIS)  # contraction d_model
+        elif name in ("wk", "wv"):
+            if kv_ok:
+                set_dim(len(shape) - 2, MODEL_AXIS)
+        elif name in ("bq",):
+            if heads_ok:
+                set_dim(len(shape) - 2, MODEL_AXIS)
+        elif name in ("bk", "bv"):
+            if kv_ok:
+                set_dim(len(shape) - 2, MODEL_AXIS)
+        elif name == "wo":
+            if heads_ok:
+                set_dim(len(shape) - 3, MODEL_AXIS)
+            else:
+                set_dim(len(shape) - 1, MODEL_AXIS)  # output d_model
+        elif name in ("w_in", "w_gate"):
+            is_moe = len(shape) >= 3 and shape[-3] == cfg.n_experts
+            # expert-parallel only when E divides the axis (dbrx 16e);
+            # otherwise tensor-parallel d_ff (mixtral 8e < 16)
+            if not (is_moe and self.expert_parallel
+                    and set_dim(len(shape) - 3, MODEL_AXIS)):
+                set_dim(len(shape) - 1, MODEL_AXIS)
+        elif name == "w_out":
+            is_moe = len(shape) >= 3 and shape[-3] == cfg.n_experts
+            if not (is_moe and self.expert_parallel
+                    and set_dim(len(shape) - 3, MODEL_AXIS)):
+                set_dim(len(shape) - 2, MODEL_AXIS)
+        elif name in ("in_proj",):  # mamba2: keep mixed projection unsharded
+            set_dim(len(shape) - 2, MODEL_AXIS)   # contraction d_model
+        elif name == "out_proj":
+            set_dim(len(shape) - 2, MODEL_AXIS)   # d_inner / d_rnn contraction
+        elif name in ("proj_rec", "proj_gate"):
+            set_dim(len(shape) - 1, MODEL_AXIS)   # d_rnn column-parallel
+        elif name in ("w_a", "w_x"):
+            set_dim(len(shape) - 2, MODEL_AXIS)   # dr contraction (dr sharded in)
+        # norms / scalars / conv weights / router: replicated
+
+        spec = self._fsdp_dim(shape, tuple(spec))
+        return P(*spec)
+
+    def params_tree(self, shapes_tree):
+        """Map a pytree of ShapeDtypeStructs -> pytree of PartitionSpecs."""
+        def walk(path, x):
+            keys = [getattr(k, "key", getattr(k, "idx", None))
+                    for k in path]
+            keys = [str(k) for k in keys if k is not None]
+            # strip the unit-stack axis (params under 'units' have a leading
+            # n_units dim): pass shape minus that axis, then re-prepend None
+            shape = x.shape
+            if "units" in keys and len(shape) >= 1:
+                sub = self.param_spec("/".join(keys), shape[1:])
+                return P(*((None,) + tuple(sub)))
+            return self.param_spec("/".join(keys), shape)
+        return jax.tree_util.tree_map_with_path(walk, shapes_tree)
+
+    # -------------------------------------------------------------- #
+    # activations / batch / caches
+    # -------------------------------------------------------------- #
+    def constrain(self, x, name):
+        """Sharding-constraint hook handed to the model."""
+        spec = None
+        if name == "heads":
+            # (B, S|T, H, hd): keep expanded GQA kv / qkv head-sharded so
+            # jnp.repeat outputs don't replicate (observed +15 GiB on
+            # qwen2-vl decode).  Indivisible head counts (musicgen 24H)
+            # shard head_dim instead; constraining to fully-unsharded heads
+            # is worse than letting GSPMD choose (observed +13 GiB).
+            batch = self.data_axis if _div(x.shape[0], self.mesh,
+                                           self.data_axis) else None
+            if _div(x.shape[2], self.mesh, MODEL_AXIS):
+                spec = P(batch, None, MODEL_AXIS, None)
+            else:
+                return x  # let GSPMD choose (constraining hurts: +13 GiB)
+        elif name == "heads_decode":
+            # decode path: match the KV-cache layout (head_dim -> model) so
+            # the ring-buffer update and the expanded kv share a sharding —
+            # otherwise GSPMD re-materialises the cache every layer
+            batch = self.data_axis if _div(x.shape[0], self.mesh,
+                                           self.data_axis) else None
+            hd = MODEL_AXIS if _div(x.shape[3], self.mesh, MODEL_AXIS) else None
+            spec = P(batch, None, None, hd)
+        elif name == "attn_scores":
+            # (B, H, S, T) score tensors: when H doesn't divide the model
+            # axis, shard the key axis instead (context parallelism) so the
+            # attention compute isn't replicated 16× (musicgen 24H)
+            if _div(x.shape[1], self.mesh, MODEL_AXIS):
+                return x  # heads already carry the model axis
+            batch = self.data_axis if _div(x.shape[0], self.mesh,
+                                           self.data_axis) else None
+            t_ax = MODEL_AXIS if _div(x.shape[3], self.mesh, MODEL_AXIS) \
+                else None
+            spec = P(batch, None, None, t_ax)
+        elif name == "moe_buf":
+            # (G, E, C, d/f) grouped capacity buffer at dispatch time:
+            # groups -> data, features -> model; E stays UNSHARDED here —
+            # a scatter whose index-targeted dim is sharded forces GSPMD to
+            # replicate the whole buffer (observed 197 GiB on dbrx prefill)
+            g_ax = self.data_axis if _div(x.shape[0], self.mesh,
+                                          self.data_axis) else None
+            f_ax = MODEL_AXIS if _div(x.shape[3], self.mesh, MODEL_AXIS) \
+                else None
+            spec = P(g_ax, None, None, f_ax)
+        elif name == "moe_buf_expert":
+            # compute-time layout: resharding moe_buf -> moe_buf_expert IS
+            # the expert-parallel dispatch all-to-all (explicit, after the
+            # scatter).  Falls back to the dispatch layout when E doesn't
+            # divide the axis (mixtral 8e: tensor-parallel experts).
+            g_ax = self.data_axis if _div(x.shape[0], self.mesh,
+                                          self.data_axis) else None
+            if _div(x.shape[1], self.mesh, MODEL_AXIS) and self.expert_parallel:
+                spec = P(g_ax, MODEL_AXIS, None, None)
+            else:
+                f_ax = MODEL_AXIS if _div(x.shape[3], self.mesh,
+                                          MODEL_AXIS) else None
+                spec = P(g_ax, None, None, f_ax)
+        elif name == "moe_groups":
+            # (G, T_local, d) grouped token tensors: groups -> data
+            g_ax = self.data_axis if _div(x.shape[0], self.mesh,
+                                          self.data_axis) else None
+            d = MODEL_AXIS if _div(x.shape[2], self.mesh, MODEL_AXIS) else None
+            spec = P(g_ax, None, d)
+        elif name == "resid":
+            seq = MODEL_AXIS if (self.seq_parallel and self.mode == "train"
+                                 and x.shape[1] % _axis_size(self.mesh, MODEL_AXIS) == 0) else None
+            batch = self.data_axis if _div(x.shape[0], self.mesh, self.data_axis) else None
+            spec = P(batch, seq, None)
+        elif name == "logits":
+            batch = self.data_axis if _div(x.shape[0], self.mesh, self.data_axis) else None
+            vocab = MODEL_AXIS if _div(x.shape[-1], self.mesh, MODEL_AXIS) else None
+            spec = P(*([batch] + [None] * (x.ndim - 2) + [vocab]))
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def batch_spec(self, shape) -> P:
+        batch = self.data_axis if _div(shape[0], self.mesh, self.data_axis) else None
+        return P(*([batch] + [None] * (len(shape) - 1)))
+
+    def cache_spec(self, path_keys, shape) -> P:
+        """KV / state caches: batch->data when divisible; long seq dims and
+        model-parallel feature dims -> model."""
+        name = path_keys[-1]
+        batch = self.data_axis if _div(shape[0], self.mesh, self.data_axis) else None
+        if name in ("k", "v"):
+            # prefer head_dim -> model: a seq-sharded ring buffer makes the
+            # per-step dynamic_update_slice reshard/replicate the whole
+            # cache (observed +15 GiB on qwen2-vl decode); hd is 64..256 on
+            # every assigned arch so it always divides the axis.  Unbatched
+            # long-context caches (long_500k) additionally spread seq over
+            # the data axis.
+            hd_ok = _div(shape[3], self.mesh, MODEL_AXIS)
+            if batch is None:
+                da = self.data_axis if isinstance(self.data_axis, tuple) \
+                    else (self.data_axis,)
+                seq = da if _div(shape[1], self.mesh, da) else None
+            else:
+                seq = None
+            if hd_ok:
+                return P(batch, seq, None, MODEL_AXIS)
+            seq_m = MODEL_AXIS if seq is None and _div(
+                shape[1], self.mesh, MODEL_AXIS) else seq
+            return P(batch, seq_m, None, None)
+        if name == "pos":
+            return P(*([None] * len(shape)))
+        if name == "state":   # ssd (B,H,P,N)
+            h = MODEL_AXIS if _div(shape[1], self.mesh, MODEL_AXIS) else None
+            return P(batch, h, None, None)
+        if name == "h":       # rglru (B,dr)
+            dr = MODEL_AXIS if _div(shape[1], self.mesh, MODEL_AXIS) else None
+            return P(batch, dr)
+        if name == "conv":    # (B, w-1, dc)
+            dc = MODEL_AXIS if _div(shape[-1], self.mesh, MODEL_AXIS) else None
+            return P(batch, None, dc)
+        return P(*([batch] + [None] * (len(shape) - 1)))
+
+    def caches_tree(self, shapes_tree):
+        def walk(path, x):
+            keys = []
+            for k in path:
+                if hasattr(k, "key"):
+                    keys.append(str(k.key))
+                elif hasattr(k, "idx"):
+                    keys.append(str(k.idx))
+            shape = x.shape
+            if keys and keys[0] == "units":
+                sub = self.cache_spec(keys, shape[1:])
+                return P(*((None,) + tuple(sub)))
+            return self.cache_spec(keys, shape)
+        return jax.tree_util.tree_map_with_path(walk, shapes_tree)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)

@@ -1,0 +1,31 @@
+"""jit'd public wrapper: model layout (B,S,H,D) -> kernel layout, GQA head
+folding, interpret-mode fallback on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    bq=512, bk=512, interpret=None):
+    """q (B,S,H,D); k/v (B,T,K,D), H % K == 0. Returns (B,S,H,D).
+
+    The leading kernel axis is (batch, head) h-major so the GQA index_map
+    (bh // group) lands on the right kv head."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    qk = jnp.swapaxes(q, 1, 2).reshape(b * h, s, d)
+    kk = jnp.swapaxes(k, 1, 2).reshape(b * kh, t, d)
+    vk = jnp.swapaxes(v, 1, 2).reshape(b * kh, t, d)
+    out = flash_attention_bhsd(qk, kk, vk, causal=causal, window=window,
+                               scale=scale, bq=bq, bk=bk,
+                               interpret=interpret)
+    return jnp.swapaxes(out.reshape(b, h, s, d), 1, 2)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Semantics: causal self-attention with optional sliding window and native
+GQA (q heads grouped onto kv heads).  Layout matches the model substrate:
+q (B,S,H,D), k/v (B,T,K,D) with H % K == 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    b, s, h, d = q.shape
+    kheads = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    reps = h // kheads
+    kf = jnp.repeat(k, reps, axis=2) if reps > 1 else k
+    vf = jnp.repeat(v, reps, axis=2) if reps > 1 else v
+    scores = jnp.einsum("bshd,bthd->bhst", q, kf).astype(jnp.float32) * scale
+    t = k.shape[1]
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, vf)

@@ -1,0 +1,57 @@
+"""NOMA SIC rate evaluation as a Pallas TPU kernel — the inner loop of the
+ERA scheduler (one evaluation per candidate allocation per admission round).
+
+Grid tiles the subchannel axis; each instance holds a (bm, U) tile in VMEM
+(U ≤ 2048 users · 4 B · bm=8 rows ≈ 64 KiB) and runs the cumulative-sum /
+suffix-interference / log2 pipeline on the VPU.  This is a bandwidth-bound
+elementwise kernel — the win on TPU is fusing the whole SIC pipeline into
+one VMEM pass instead of five HBM round-trips (cumsum, gather, sub, div,
+log) for paper-scale (M=250, U=1250) scenarios.
+
+NOTE the in-kernel gather (take_along_axis on the lane axis) is exercised in
+interpret mode here; on real TPUs it lowers to dynamic-slice-in-lane which
+Mosaic supports for rank-2 refs.
+
+The GD path keeps the pure-jnp implementation (autodiff); this kernel serves
+the no-gradient evaluation path (scheduler scoring, benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(contrib_ref, sig_ref, gend_ref, inter_ref, rate_ref, *, bw):
+    contrib = contrib_ref[...].astype(jnp.float32)     # (bm, U)
+    sig = sig_ref[...].astype(jnp.float32)
+    gend = gend_ref[...]
+    inter = inter_ref[...].astype(jnp.float32)
+
+    cs = jnp.cumsum(contrib, axis=1)
+    end_cs = jnp.take_along_axis(cs, gend, axis=1)
+    intra = end_cs - cs
+    sinr = sig / (intra + inter)
+    rate_ref[...] = (bw * jnp.log2(1.0 + sinr)).astype(rate_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "bm", "interpret"))
+def noma_rate(contrib, sig, group_end, inter, *, bw, bm=8, interpret=False):
+    """All inputs (M, U) in SIC-sorted order; returns rates (M, U)."""
+    m, u = contrib.shape
+    bm = min(bm, m)
+    grid = (pl.cdiv(m, bm),)
+    kernel = functools.partial(_kernel, bw=bw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, u), lambda i: (i, 0))] * 4,
+        out_specs=pl.BlockSpec((bm, u), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, u), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(contrib, sig, group_end, inter)

@@ -1,0 +1,35 @@
+"""Scenario-level wrapper: assemble SIC-sorted tensors from a Scenario +
+allocation, run the rate kernel, scatter back to user order."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.noma_rate.kernel import noma_rate
+
+
+def uplink_rates_kernel(scn, beta_up, p, *, interpret=None):
+    """Drop-in for core.noma.uplink_rates on the no-gradient path."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cfg = scn.cfg
+    own = scn.own_gain_up()                        # (U, M)
+    contrib = (beta_up * p[:, None] * own).T       # (M, U)
+    sig = (p[:, None] * own).T
+
+    # inter-cell + noise, in user order then sorted
+    t_all = jnp.einsum("um,unm->nm", beta_up * p[:, None], scn.h_up)
+    own_cell = jax.ops.segment_sum(beta_up * p[:, None] * own, scn.assoc,
+                                   num_segments=cfg.n_aps)
+    inter = (t_all - own_cell)[scn.assoc].T + cfg.noise_w  # (M, U)
+
+    mi = jnp.arange(contrib.shape[0])[:, None]
+    c_sorted = contrib[mi, scn.up_order]
+    s_sorted = sig[mi, scn.up_order]
+    i_sorted = inter[mi, scn.up_order]
+
+    rate_sorted = noma_rate(c_sorted, s_sorted, scn.up_group_end, i_sorted,
+                            bw=cfg.subchannel_bw, interpret=interpret)
+    # back to user order, then weight by β and sum over channels
+    rates = jnp.zeros_like(rate_sorted).at[mi, scn.up_order].set(rate_sorted)
+    return jnp.sum(beta_up.T * rates, axis=0)

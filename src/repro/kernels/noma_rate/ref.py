@@ -1,0 +1,24 @@
+"""Oracle for the NOMA SIC rate kernel.
+
+Works on pre-sorted per-subchannel tensors (the static SIC ordering of
+core.network.Scenario):
+  contrib (M, U)     β·p·|h|² sorted in SIC decode order, grouped by AP
+  sig     (M, U)     p·|h|² (signal power) in the same order
+  group_end (M, U)   index of the last same-AP entry for each position
+  inter   (M, U)     inter-cell interference + noise (already summed)
+
+Returns per-(channel, sorted-user) rate contribution:
+  rate = bw · log2(1 + sig / (suffix_intra + inter))
+with suffix_intra[i] = Σ contrib(i..group_end[i]] (users decoded later).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def noma_rate_ref(contrib, sig, group_end, inter, bw):
+    cs = jnp.cumsum(contrib, axis=1)
+    end_cs = jnp.take_along_axis(cs, group_end, axis=1)
+    intra = end_cs - cs
+    sinr = sig / (intra + inter)
+    return bw * jnp.log2(1.0 + sinr)

@@ -1,0 +1,12 @@
+"""jit'd wrapper with CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import rglru_scan
+
+
+def linear_scan(a, b, *, lc=256, bd=256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rglru_scan(a, b, lc=lc, bd=bd, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Oracle for the gated linear recurrence h_t = a_t ⊙ h_{t-1} + b_t.
+
+Two reference implementations: an O(L) sequential scan (ground truth) and
+the O(log L) associative scan the model's XLA path uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_sequential(a, b, h0=None):
+    """a, b: (B, L, D). Returns h (B, L, D)."""
+    bt, l, d = a.shape
+    h = jnp.zeros((bt, d), a.dtype) if h0 is None else h0
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0),
+                                   jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def linear_scan_associative(a, b):
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,31 @@
+"""jit'd wrapper: model layout -> SSD kernel layout (+ interpret fallback)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_bhcqp
+
+
+def ssd(x, dt, a, b, c, d, *, chunk=256, interpret=None):
+    """Same contract as kernels.ssd.ref.ssd_chunked:
+
+    x (Bt,L,H,P); dt (Bt,L,H); a (H,); b/c (Bt,L,N); d (H,).
+    Returns (y (Bt,L,H,P), final_state (Bt,H,P,N))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bt, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    xk = jnp.moveaxis(x.reshape(bt, nc, q, h, p), 3, 1)      # (B,H,nc,Q,P)
+    dtk = jnp.moveaxis(dt.reshape(bt, nc, q, h), 3, 1)       # (B,H,nc,Q)
+    bk = b.reshape(bt, nc, q, n)
+    ck = c.reshape(bt, nc, q, n)
+
+    y, state = ssd_bhcqp(xk, dtk, a.astype(jnp.float32), bk, ck,
+                         d.astype(jnp.float32), chunk=q, interpret=interpret)
+    y = jnp.moveaxis(y, 1, 3).reshape(bt, l, h, p)
+    return y, state

@@ -1,0 +1,126 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) scan.
+
+Semantics (per batch b, head h, head-dim p, state n):
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * B_t  x_t^T      (S: (P, N))
+    y_t = C_t · S_t + D_h * x_t
+
+``ssd_chunked`` evaluates this with the SSD block decomposition (intra-chunk
+quadratic term + inter-chunk recurrence) — the same algorithm the Pallas
+kernel implements with VMEM tiles; ``ssd_sequential`` is the step-by-step
+recurrence used to cross-check both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_BIG = -1e30
+
+
+def ssd_sequential(x, dt, A, B, C, D, init_state=None):
+    """Step-by-step reference.
+
+    x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,) (negative); B, C: (Bt, L, N);
+    D: (H,). Returns y (Bt, L, H, P), final_state (Bt, H, P, N). f32 math.
+    """
+    bt, l, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    s0 = (jnp.zeros((bt, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        x_t, dt_t, b_t, c_t = inp  # (Bt,H,P), (Bt,H), (Bt,N), (Bt,N)
+        decay = jnp.exp(dt_t * Af)[:, :, None, None]  # (Bt,H,1,1)
+        upd = (dt_t[:, :, None, None] * x_t[:, :, :, None]
+               * b_t[:, None, None, :])  # (Bt,H,P,N)
+        s = decay * s + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y_t
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk=64, init_state=None):
+    """Chunked SSD. Same signature/semantics as ``ssd_sequential``.
+
+    L must be divisible by ``chunk``.
+    """
+    bt, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    q = chunk
+
+    xf = x.astype(jnp.float32).reshape(bt, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bt, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(bt, nc, q, n)
+    Cf = C.astype(jnp.float32).reshape(bt, nc, q, n)
+    Af = A.astype(jnp.float32)
+
+    da = dtf * Af[None, None, None, :]          # (Bt,nc,Q,H) log-decay steps
+    cs = jnp.cumsum(da, axis=2)                  # inclusive cumsum within chunk
+    total = cs[:, :, -1, :]                      # (Bt,nc,H)
+
+    xb = dtf[..., None] * xf                     # dt_j * x_j  (Bt,nc,Q,H,P)
+
+    # ---- intra-chunk (quadratic) term ----
+    # M[h,i,j] = C_i·B_j * exp(cs_i - cs_j) for i >= j
+    g = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)    # (Bt,nc,Q,Q)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (Bt,nc,i,j,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, NEG_BIG)
+    m = jnp.exp(diff) * g[..., None]             # (Bt,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xb)
+
+    # ---- chunk-local end states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cs)    # (Bt,nc,Q,H)
+    s_local = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, Bf, xb)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    s0 = (jnp.zeros((bt, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        tot_c, sloc_c = inp  # (Bt,H), (Bt,H,P,N)
+        s_prev = s
+        s = jnp.exp(tot_c)[:, :, None, None] * s + sloc_c
+        return s, s_prev
+
+    s_fin, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_local, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)        # (Bt,nc,H,P,N) state entering chunk
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(cs)               # (Bt,nc,Q,H)
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp",
+                         decay_from_start, Cf, s_prevs)
+
+    y = (y_intra + y_inter).reshape(bt, l, h, p)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """Single-token recurrent update.
+
+    x: (Bt, H, P); dt: (Bt, H); B, C: (Bt, N); state: (Bt, H, P, N).
+    Returns y (Bt, H, P), new_state.
+    """
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))[:, :, None, None]
+    upd = (dtf[:, :, None, None] * xf[:, :, :, None]
+           * B.astype(jnp.float32)[:, None, None, :])
+    state = decay * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C.astype(jnp.float32))
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), state

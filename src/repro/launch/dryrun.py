@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first init.  512 placeholder host devices back the production meshes
+# (16×16 single-pod, 2×16×16 multi-pod).  Dry-run ONLY — tests/benches see
+# the real single CPU device.
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers, compiles, fits per-chip memory, and extract the
+roofline inputs (FLOPs / HBM bytes / collective bytes) from the compiled
+artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Results are cached incrementally in experiments/dryrun/<pair>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_architectures
+from repro.distributed.sharding import ShardingRules
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (SHAPES, abstract_params, abstract_train_state,
+                                input_specs, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                shape_applicable)
+from repro.training import optim
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+CHIP_HBM_BYTES = 16 * 2 ** 30  # v5e: 16 GiB
+
+
+def _shardings(rules, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *, expert_parallel=None,
+                  seq_parallel=True, serve_2d_threshold=8 * 2 ** 30,
+                  impl="chunked", microbatches=None, score_parallel=None,
+                  bf16_accum=False):
+    """Lower the right step function for (arch, shape) on ``mesh``.
+
+    expert_parallel defaults to True for MoE archs: tensor-parallel experts
+    make GSPMD fully rematerialize the scatter-dispatch token buffers
+    (observed +8 GiB/chip on dbrx train_4k); expert-parallel dispatch
+    (all-to-all on the model axis) is both smaller and the realistic layout.
+    """
+    cfg = get_config(arch)
+    if expert_parallel is None:
+        expert_parallel = cfg.n_experts > 0
+    if cfg.n_experts > 0:
+        # shard-local dispatch groups = data-axis extent (GShard per-device
+        # capacity); keeps routing scatters local — see models/moe.py
+        data_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                                 if a != "model"]))
+        cfg = cfg.replace(moe_dispatch_groups=data_size)
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    specs = input_specs(cfg, shape_name)
+
+    if score_parallel is None:
+        # §Perf default: context-parallel attention scores for prefill of
+        # archs whose GLOBAL-attention head count doesn't divide the model
+        # axis (musicgen 24H: 12.7× compute / 7.6× memory; gemma-2b 8H:
+        # 8.4× / 3.5×).  Harmful for banded local attention
+        # (recurrentgemma: refuted, +18 GiB) and neutral-to-negative for
+        # decode — both stay off.
+        has_global = any(m == "attn" for m, _ in cfg.pattern)
+        model_size = mesh.shape["model"]
+        score_parallel = (kind == "prefill" and has_global
+                          and cfg.n_heads % model_size != 0)
+    if score_parallel:
+        # context-parallel scores for indivisible-head archs (§Perf)
+        from repro.models import attention as attn_mod
+
+        class _Hook:
+            def __init__(self):
+                self.rules = None
+
+            def __call__(self, x, name):
+                return self.rules.constrain(x, name) if self.rules else x
+        _hook = _Hook()
+        attn_mod.set_score_constrain(_hook)
+    else:
+        _hook = None
+
+    if kind == "train":
+        rules = ShardingRules(cfg, mesh, mode="train",
+                              expert_parallel=expert_parallel,
+                              seq_parallel=seq_parallel)
+        if _hook:
+            _hook.rules = rules
+        state_shapes = abstract_train_state(cfg)
+        p_spec = rules.params_tree(state_shapes["params"])
+        # OptState m/v mirror the param sharding exactly (ZeRO)
+        state_spec = {
+            "params": p_spec,
+            "opt": optim.OptState(step=P(), m=p_spec, v=p_spec),
+        }
+        batch_spec = {k: rules.batch_spec(v.shape) for k, v in specs.items()}
+        import jax.numpy as jnp
+        fn = make_train_step(cfg, constrain=rules.constrain, impl=impl,
+                             microbatches=microbatches,
+                             accum_dtype=jnp.bfloat16 if bf16_accum
+                             else jnp.float32)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_shardings(rules, state_spec),
+                          _shardings(rules, batch_spec)),
+            out_shardings=(_shardings(rules, state_spec), None),
+            donate_argnums=(0,),
+        )
+        return cfg, jitted.lower(state_shapes, specs)
+
+    # serving
+    param_bytes = sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(abstract_params(cfg)))
+    mode = "serve"
+    rules = ShardingRules(cfg, mesh, mode=mode,
+                          expert_parallel=expert_parallel)
+    if _hook:
+        _hook.rules = rules
+    # big models get 2-D (fsdp-style) weight sharding even when serving
+    if param_bytes // 16 > serve_2d_threshold:
+        rules.mode = "train"          # enables the second-dim sharding
+        rules.seq_parallel = False
+        rules.mode_label = "serve-2d"
+    params_shapes = abstract_params(cfg)
+    p_spec = rules.params_tree(params_shapes)
+    p_shard = _shardings(rules, p_spec)
+
+    if kind == "prefill":
+        batch_spec = {k: rules.batch_spec(v.shape) for k, v in specs.items()}
+        fn = make_prefill_step(cfg, constrain=rules.constrain, impl=impl)
+        jitted = jax.jit(fn, in_shardings=(p_shard,
+                                           _shardings(rules, batch_spec)))
+        return cfg, jitted.lower(params_shapes, specs)
+
+    # decode
+    cache_spec = rules.caches_tree(specs["caches"])
+    cache_shard = _shardings(rules, cache_spec)
+    tok_shard = NamedSharding(mesh, rules.batch_spec(specs["tokens"].shape))
+    pos_shard = NamedSharding(mesh, P())
+    fn = make_decode_step(cfg, constrain=rules.constrain)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, tok_shard, pos_shard, cache_shard),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(3,),
+    )
+    return cfg, jitted.lower(params_shapes, specs["tokens"], specs["pos"],
+                             specs["caches"])
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod=False,
+             expert_parallel=None, seq_parallel=True, impl="chunked",
+             microbatches=None, score_parallel=None, bf16_accum=False,
+             tag="") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    cfg, lowered = build_lowered(arch, shape_name, mesh,
+                                 expert_parallel=expert_parallel,
+                                 seq_parallel=seq_parallel, impl=impl,
+                                 microbatches=microbatches,
+                                 score_parallel=score_parallel,
+                                 bf16_accum=bf16_accum)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    parsed = hlo_cost.analyze(compiled.as_text())
+
+    per_chip = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "tag": tag,
+        "ok": True,
+        "expert_parallel": expert_parallel,
+        "seq_parallel": seq_parallel,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_chip_bytes": per_chip,
+            "fits_16gib": bool(per_chip < CHIP_HBM_BYTES),
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed")},
+        "per_chip": {
+            "flops": parsed.flops,
+            "write_bytes": parsed.write_bytes,
+            "write_bytes_raw": parsed.write_bytes_raw,
+            "collective_bytes": parsed.coll_bytes,
+            "collective_bytes_total": parsed.total_coll_bytes,
+        },
+    }
+    return rec
+
+
+def pair_key(arch, shape, multi_pod, tag=""):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    t = f".{tag}" if tag else ""
+    return f"{arch}.{shape}.{mesh}{t}"
+
+
+def all_pairs():
+    for arch in list_architectures():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape_applicable(cfg, shape):
+                yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--expert-parallel", action="store_true", default=None)
+    ap.add_argument("--no-expert-parallel", dest="expert_parallel",
+                    action="store_false")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--impl", default="chunked",
+                    choices=["chunked", "chunked_tri", "naive"])
+    ap.add_argument("--score-parallel", action="store_true", default=None)
+    ap.add_argument("--bf16-accum", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        pairs = list(all_pairs())
+    else:
+        pairs = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch, shape in pairs:
+            key = pair_key(arch, shape, multi_pod, args.tag)
+            out = OUT_DIR / f"{key}.json"
+            if out.exists() and not args.force:
+                print(f"[skip] {key}")
+                continue
+            print(f"[run ] {key} ...", flush=True)
+            try:
+                rec = run_pair(arch, shape, multi_pod=multi_pod,
+                               expert_parallel=args.expert_parallel,
+                               seq_parallel=not args.no_seq_parallel,
+                               microbatches=args.microbatches,
+                               impl=args.impl,
+                               score_parallel=args.score_parallel,
+                               bf16_accum=args.bf16_accum,
+                               tag=args.tag)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if multi_pod else "16x16",
+                       "tag": args.tag, "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-3000:]}
+                print(f"[FAIL] {key}: {e}")
+            out.write_text(json.dumps(rec, indent=2))
+            if rec.get("ok"):
+                m = rec["mem"]
+                print(f"[ ok ] {key} compile={rec['compile_s']}s "
+                      f"per_chip={m['per_chip_bytes']/2**30:.2f}GiB "
+                      f"flops={rec['per_chip']['flops']:.3e} "
+                      f"coll={rec['per_chip']['collective_bytes_total']:.3e}",
+                      flush=True)
+    print(f"done; failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,189 @@
+"""Jittable train / prefill / decode step builders + ShapeDtypeStruct input
+specs for every assigned (architecture × input shape) pair.
+
+INPUT SHAPES (assigned):
+  train_4k     seq 4096,    global batch 256   -> train_step
+  prefill_32k  seq 32768,   global batch 32    -> prefill_step (forward)
+  decode_32k   KV 32768,    global batch 128   -> decode_step (1 new token)
+  long_500k    KV 524288,   global batch 1     -> decode_step, sub-quadratic
+                                                  archs only (DESIGN.md)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.training import losses, optim
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def shape_applicable(cfg, shape_name: str) -> bool:
+    """long_500k only runs for sub-quadratic attention (DESIGN.md skips)."""
+    if shape_name != "long_500k":
+        return True
+    # allowed: no global-attention mixer, or bounded global share with the
+    # big KV sharded (gemma3 5:1 local:global)
+    if cfg.is_subquadratic:
+        return True
+    n_global = sum(1 for m, _ in cfg.layer_specs if m == "attn")
+    return n_global * 6 <= cfg.n_layers  # ≥5:1 local:global
+
+
+def input_specs(cfg, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — shardable, no
+    device allocation."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    i32 = jnp.int32
+
+    def sds(shape, dt=i32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    if info["kind"] in ("train", "prefill"):
+        specs = {}
+        s_text = s
+        if cfg.vision_tokens:
+            s_text = s - cfg.vision_tokens
+            specs["vision_embeds"] = sds((b, cfg.vision_tokens, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+            specs["positions"] = sds((b, 3, s))
+        if cfg.n_codebooks > 1:
+            specs["tokens"] = sds((b, cfg.n_codebooks, s_text))
+        else:
+            specs["tokens"] = sds((b, s_text))
+        if info["kind"] == "train":
+            if cfg.n_codebooks > 1:
+                specs["labels"] = sds((b, cfg.n_codebooks, s_text))
+            else:
+                specs["labels"] = sds((b, s))  # includes vision positions (-1)
+        return specs
+
+    # decode: one token against a cache of length `seq`
+    specs = {
+        "tokens": sds((b, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b,)),
+        "pos": sds(()),
+    }
+    specs["caches"] = jax.eval_shape(
+        partial(T.init_caches, cfg, b, s))
+    return specs
+
+
+# --------------------------------------------------------------------------- #
+# step functions
+# --------------------------------------------------------------------------- #
+# per-arch microbatch counts for train_4k (global batch 256): keeps MoE
+# dispatch buffers + logits inside 16 GiB/chip; grads accumulate in f32 so
+# the roofline FLOPs are unchanged.
+MICROBATCHES = {
+    "dbrx-132b": 32,
+    "mixtral-8x22b": 32,
+    "qwen2-vl-72b": 16,
+    "llama3-8b": 2,
+    "gemma3-12b": 8,
+    "gemma-2b": 2,
+    "recurrentgemma-2b": 2,
+}
+
+
+def make_train_step(cfg, opt_cfg: optim.AdamWConfig = optim.AdamWConfig(),
+                    constrain=None, impl="chunked", microbatches=None,
+                    accum_dtype=jnp.float32):
+    """``accum_dtype=jnp.bfloat16`` halves the gradient-accumulation buffer
+    (a §Perf lever: the saved HBM can buy a smaller microbatch count, which
+    cuts ZeRO-3 weight-regather collectives proportionally); f32 is the
+    numerics-safe default."""
+    constrain = constrain or (lambda x, name: x)
+    nm = microbatches or MICROBATCHES.get(cfg.name, 1)
+
+    def loss_fn(p, mb):
+        kw = {}
+        if "vision_embeds" in mb:
+            kw["vision_embeds"] = mb["vision_embeds"]
+            kw["positions"] = mb.get("positions")
+        logits, aux = T.forward(p, cfg, mb["tokens"], impl=impl,
+                                constrain=constrain, remat=True, **kw)
+        loss = losses.lm_loss(cfg, logits, mb["labels"])
+        return loss + MOE_AUX_WEIGHT * aux, loss
+
+    def train_step(state, batch):
+        params = state["params"]
+        if nm == 1:
+            (total, loss), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def mb_body(carry, mb):
+                acc_g, acc_t, acc_l = carry
+                (t, l), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), acc_g, g)
+                return (acc_g, acc_t + t, acc_l + l), None
+
+            (grads, total, loss), _ = jax.lax.scan(
+                mb_body, (g0, jnp.float32(0), jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            total, loss = total / nm, loss / nm
+        new_params, opt_state, om = optim.apply(
+            opt_cfg, params, grads, state["opt"])
+        metrics = {"loss": loss, "total_loss": total, **om}
+        return {"params": new_params, "opt": opt_state}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, constrain=None, impl="chunked"):
+    constrain = constrain or (lambda x, name: x)
+
+    def prefill_step(params, batch):
+        kw = {}
+        if "vision_embeds" in batch:
+            kw["vision_embeds"] = batch["vision_embeds"]
+            kw["positions"] = batch.get("positions")
+        logits, _ = T.forward(params, cfg, batch["tokens"], impl=impl,
+                              constrain=constrain, **kw)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(cfg, constrain=None):
+    constrain = constrain or (lambda x, name: x)
+
+    def decode_step(params, tokens, pos, caches):
+        return T.decode_step(params, cfg, tokens, pos, caches,
+                             constrain=constrain)
+
+    return decode_step
+
+
+def init_train_state(cfg, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = T.init(key, cfg)
+    return {"params": params, "opt": optim.init(params)}
+
+
+def abstract_train_state(cfg):
+    return jax.eval_shape(lambda: init_train_state(cfg))
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda: T.init(jax.random.PRNGKey(0), cfg))

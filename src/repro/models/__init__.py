@@ -1,0 +1,2 @@
+"""Pure-JAX model substrate for the assigned architectures."""
+from repro.models import transformer  # noqa: F401

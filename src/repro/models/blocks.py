@@ -1,0 +1,124 @@
+"""Residual block = (mixer, ffn) pair behind pre-norms, dispatched on the
+pattern spec.  Three entry points per block: ``forward`` (train), ``prefill``
+(forward + cache capture), ``decode`` (single token against a cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, ffn as ffn_mod, moe as moe_mod
+from repro.models import rglru, ssm
+from repro.models.common import rms_norm
+
+
+def init(key, cfg, spec):
+    mixer, ffn_kind = spec
+    keys = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.dtype)
+    p = {"norm1": jnp.zeros((cfg.d_model,), dt) if cfg.gemma_style
+         else jnp.ones((cfg.d_model,), dt)}
+    if mixer in ("attn", "local"):
+        p["mixer"] = attention.init(keys[0], cfg)
+    elif mixer == "rec":
+        p["mixer"] = rglru.init(keys[0], cfg)
+    elif mixer == "ssd":
+        p["mixer"] = ssm.init(keys[0], cfg)
+    if ffn_kind != "none":
+        p["norm2"] = jnp.zeros_like(p["norm1"]) if cfg.gemma_style \
+            else jnp.ones_like(p["norm1"])
+        p["ffn"] = (moe_mod.init(keys[1], cfg) if ffn_kind == "moe"
+                    else ffn_mod.init(keys[1], cfg))
+    return p
+
+
+def _norm(cfg, x, w):
+    return rms_norm(x, w, cfg.norm_eps, gemma_style=cfg.gemma_style)
+
+
+def _noop(x, name):
+    return x
+
+
+def _apply_ffn(params, cfg, spec, x, constrain=_noop):
+    """Returns (y, aux)."""
+    _, ffn_kind = spec
+    if ffn_kind == "none":
+        return x, 0.0
+    h = _norm(cfg, x, params["norm2"])
+    if ffn_kind == "moe":
+        y, aux = moe_mod.forward(params["ffn"], cfg, h, constrain=constrain)
+    else:
+        y, aux = ffn_mod.forward(params["ffn"], cfg, h), 0.0
+    return x + y, aux
+
+
+def forward(params, cfg, spec, x, positions, impl="naive", constrain=_noop):
+    """(x, positions) -> (x, moe_aux). Full sequence, no cache capture."""
+    mixer, _ = spec
+    h = _norm(cfg, x, params["norm1"])
+    if mixer in ("attn", "local"):
+        y = attention.forward(params["mixer"], cfg, h, positions,
+                              mixer=mixer, impl=impl, constrain=constrain)
+    elif mixer == "rec":
+        y, _ = rglru.forward(params["mixer"], cfg, h,
+                             impl="pallas" if impl == "pallas" else "ref")
+    elif mixer == "ssd":
+        y = ssm.forward(params["mixer"], cfg, h,
+                        impl="pallas" if impl == "pallas" else "ref")
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    return _apply_ffn(params, cfg, spec, x, constrain)
+
+
+# --------------------------------------------------------------------------- #
+# caches
+# --------------------------------------------------------------------------- #
+def init_cache(cfg, spec, batch, max_seq, dtype=None):
+    mixer, _ = spec
+    if mixer in ("attn", "local"):
+        return attention.init_cache(cfg, batch, max_seq, mixer=mixer,
+                                    dtype=dtype)
+    if mixer == "rec":
+        return rglru.init_cache(cfg, batch, dtype=dtype)
+    if mixer == "ssd":
+        return ssm.init_cache(cfg, batch, dtype=dtype)
+    raise ValueError(mixer)
+
+
+def prefill(params, cfg, spec, x, positions, max_seq, impl="naive",
+            constrain=_noop):
+    """Like forward, but also returns the decode cache."""
+    mixer, _ = spec
+    h = _norm(cfg, x, params["norm1"])
+    if mixer in ("attn", "local"):
+        y, cache = attention.prefill(params["mixer"], cfg, h, positions,
+                                     max_seq, mixer=mixer, impl=impl,
+                                     constrain=constrain)
+    elif mixer == "rec":
+        y, cache = rglru.prefill(params["mixer"], cfg, h)
+    elif mixer == "ssd":
+        y, cache = ssm.prefill(params["mixer"], cfg, h)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    x, aux = _apply_ffn(params, cfg, spec, x, constrain)
+    return x, cache, aux
+
+
+def decode(params, cfg, spec, x, pos, cache, constrain=_noop):
+    """Single-token step. x (B,1,D); pos scalar int32."""
+    mixer, _ = spec
+    h = _norm(cfg, x, params["norm1"])
+    if mixer in ("attn", "local"):
+        y, cache = attention.decode_step(params["mixer"], cfg, h, pos, cache,
+                                         mixer=mixer, constrain=constrain)
+    elif mixer == "rec":
+        y, cache = rglru.decode_step(params["mixer"], cfg, h, cache)
+    elif mixer == "ssd":
+        y, cache = ssm.decode_step(params["mixer"], cfg, h, cache)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    x, _ = _apply_ffn(params, cfg, spec, x, constrain)
+    return x, cache

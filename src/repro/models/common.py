@@ -1,0 +1,103 @@
+"""Shared model primitives: init helpers, norms, activations, RoPE / M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, dtype, in_axis_size=None):
+    """Truncated-normal fan-in init (LeCun-ish)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms / activations
+# --------------------------------------------------------------------------- #
+def rms_norm(x, weight, eps, gemma_style=False):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if gemma_style:
+        y = y * (1.0 + w)
+    else:
+        y = y * w
+    return y.astype(dt)
+
+
+def activate(x_gate, x_lin, kind):
+    """Gated activation: silu (SwiGLU) / geglu / plain gelu."""
+    if kind == "silu":
+        return jax.nn.silu(x_gate) * x_lin
+    if kind == "geglu":
+        return jax.nn.gelu(x_gate, approximate=True) * x_lin
+    if kind == "gelu":
+        return jax.nn.gelu(x_gate, approximate=True)  # non-gated
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D); positions: broadcastable to (..., S) int32."""
+    half = x.shape[-1] // 2
+    freqs = jnp.asarray(rope_freqs(x.shape[-1], theta))  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    angles = angles[..., None, :]  # (..., S, 1, half) broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (..., S, H, D); positions: (..., 3, S) — t/h/w position ids.
+    ``sections`` partitions the half dim; frequencies for section j rotate by
+    positions[j].
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(x.shape[-1], theta))  # (half,)
+    # build per-frequency position selector: (..., S, half)
+    parts = []
+    start = 0
+    for j, sec in enumerate(sections):
+        pos_j = positions[..., j, :]  # (..., S)
+        ang = pos_j[..., None].astype(jnp.float32) * freqs[start:start + sec]
+        parts.append(ang)
+        start += sec
+    angles = jnp.concatenate(parts, axis=-1)[..., None, :]  # (..., S, 1, half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg, batch, seq, offset=0):
+    """Default (text-only) position ids; M-RoPE archs replicate across t/h/w."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset  # (1, S)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[:, None, :], (batch, 3, seq))
+    return pos

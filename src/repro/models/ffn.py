@@ -1,0 +1,34 @@
+"""Dense feed-forward: SwiGLU / GeGLU (gated) or plain GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activate, dense_init
+
+
+def is_gated(kind: str) -> bool:
+    return kind in ("silu", "geglu")
+
+
+def init(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(keys[0], (d, f), dt),
+        "w_out": dense_init(keys[1], (f, d), dt, in_axis_size=f),
+    }
+    if is_gated(cfg.activation):
+        p["w_gate"] = dense_init(keys[2], (d, f), dt)
+    return p
+
+
+def forward(params, cfg, x):
+    h_lin = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if is_gated(cfg.activation):
+        h_gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = activate(h_gate, h_lin, cfg.activation)
+    else:
+        h = activate(h_lin, h_lin, cfg.activation)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

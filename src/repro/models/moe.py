@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch (GShard-style).
+
+Top-k routing -> cumsum position-in-expert -> scatter tokens into an
+(G, E, C, d) capacity buffer -> batched expert SwiGLU einsum -> gather /
+combine.  Compute scales with *active* experts (top_k × tokens ×
+capacity_factor), not with E, so the roofline MODEL_FLOPS/HLO_FLOPs ratio
+stays honest for dbrx/mixtral.
+
+``cfg.moe_dispatch_groups`` (set by the distributed layer to the data-axis
+size) partitions tokens into independent dispatch groups with per-group
+capacity — the GShard "per-device expert capacity" scheme.  This keeps the
+routing scatter/gather shard-local: with one global group, GSPMD must
+all-gather every (T·k, d) update onto every chip (observed +12 GiB/chip on
+dbrx 1M-token prefill) because global positions land in any capacity shard.
+
+Tokens past per-group expert capacity are dropped (contribute zero) —
+standard GShard semantics; the router aux loss keeps load balanced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activate, dense_init
+from repro.models.ffn import is_gated
+
+# expert-FFN capacity chunk: bounds the (E, Cc, d_ff) hidden buffer for very
+# long prefills
+C_CHUNK = 8192
+
+
+def init(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(keys[0], (d, e), jnp.float32),
+        "w_in": dense_init(keys[1], (e, d, f), dt, in_axis_size=d),
+        "w_out": dense_init(keys[2], (e, f, d), dt, in_axis_size=f),
+    }
+    if is_gated(cfg.activation):
+        p["w_gate"] = dense_init(keys[3], (e, d, f), dt, in_axis_size=d)
+    return p
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    """Per-group expert capacity for a group of ``n_tokens`` tokens."""
+    c = int(cfg.top_k * n_tokens * cfg.capacity_factor / cfg.n_experts)
+    c = max(c, cfg.top_k)
+    if c > C_CHUNK:  # round up so the chunked expert scan divides evenly
+        c = (c + C_CHUNK - 1) // C_CHUNK * C_CHUNK
+    return c
+
+
+def route(params, cfg, x_flat):
+    """x_flat (..., T, d) -> (expert_idx (...,T,k), gates (...,T,k), aux)."""
+    logits = x_flat.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    e = cfg.n_experts
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32),
+                  axis=tuple(range(idx.ndim - 1)))
+    ce = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = e * jnp.sum(me * ce)
+    return idx, gate, aux
+
+
+def _noop(x, name):
+    return x
+
+
+def forward(params, cfg, x, constrain=_noop):
+    """x (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    g = cfg.moe_dispatch_groups if t % max(cfg.moe_dispatch_groups, 1) == 0 \
+        else 1
+    g = max(g, 1)
+    tl = t // g
+    cap = capacity(cfg, tl)
+
+    xg = constrain(x.reshape(g, tl, d), "moe_groups")
+    idx, gate, aux = route(params, cfg, xg)        # (G,Tl,k)
+
+    # position of each (token, slot) within its (group, expert)
+    flat_e = idx.reshape(g, tl * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (G,Tlk,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None],
+                              axis=2)[..., 0]                  # (G,Tlk)
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, cap - 1)
+
+    # k-fold token replication via repeat (NOT a gather: GSPMD replicates
+    # gathers over the group axis — observed 6 GiB/chip on dbrx prefill)
+    x_rep = jnp.repeat(xg, k, axis=1)                          # (G,Tlk,d)
+    contrib = jnp.where(keep[..., None], x_rep, 0).astype(x.dtype)
+    contrib = constrain(contrib, "moe_groups")                 # (G,Tlk,d)
+
+    # vmapped scatter/gather make G an operand-batching dim, which GSPMD
+    # can shard (fancy-indexing with a broadcast group index replicates)
+    def _scatter(fe, sp, c):
+        return jnp.zeros((e, cap, d), x.dtype).at[fe, sp].add(c, mode="drop")
+
+    buf = jax.vmap(_scatter)(flat_e, safe_pos, contrib)
+    buf = constrain(buf, "moe_buf")                            # (G,E,C,d)
+    # dispatch all-to-all: reshard to the compute layout (E -> model when
+    # expert-parallel); explicit so the scatter above stays shard-local
+    buf = constrain(buf, "moe_buf_expert")
+
+    # expert FFN (batched over G, E); capacity-chunked for huge C
+    def expert_ffn(block):
+        h_lin = constrain(
+            jnp.einsum("gecd,edf->gecf", block, params["w_in"]),
+            "moe_buf_expert")
+        if is_gated(cfg.activation):
+            h_gate = constrain(
+                jnp.einsum("gecd,edf->gecf", block, params["w_gate"]),
+                "moe_buf_expert")
+            h = activate(h_gate, h_lin, cfg.activation)
+        else:
+            h = activate(h_lin, h_lin, cfg.activation)
+        return constrain(
+            jnp.einsum("gecf,efd->gecd", h, params["w_out"]),
+            "moe_buf_expert")
+
+    if cap > C_CHUNK and cap % C_CHUNK == 0:
+        nb = cap // C_CHUNK
+        blocks = jnp.moveaxis(buf.reshape(g, e, nb, C_CHUNK, d), 2, 0)
+        out_blocks = jax.lax.map(expert_ffn, blocks)
+        out_buf = jnp.moveaxis(out_blocks, 0, 2).reshape(g, e, cap, d)
+    else:
+        out_buf = expert_ffn(buf)                              # (G,E,C,d)
+
+    # combine all-to-all: back to the dispatch layout for the local gather
+    out_buf = constrain(out_buf, "moe_buf")
+    gathered = jax.vmap(lambda ob, fe, sp: ob[fe, sp])(
+        out_buf, flat_e, safe_pos)                             # (G,Tlk,d)
+    gathered = constrain(jnp.where(keep[..., None], gathered, 0),
+                         "moe_groups")
+    weighted = gathered * gate.reshape(g, tl * k)[..., None].astype(x.dtype)
+    y = jnp.sum(weighted.reshape(g, tl, k, d), axis=2)
+    return y.reshape(b, s, d), aux

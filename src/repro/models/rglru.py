@@ -1,0 +1,140 @@
+"""Griffin / RecurrentGemma recurrent block.
+
+Structure (per Griffin, arXiv:2402.19427):
+  x -> linear (d -> d_rnn) -> causal conv1d(w=4) -> RG-LRU -\
+  x -> linear (d -> d_rnn) -> GeLU                 ---------- ⊙ -> out proj
+
+RG-LRU:
+  r_t = sigmoid(x_t W_a + b_a)            (recurrence gate)
+  i_t = sigmoid(x_t W_x + b_x)            (input gate)
+  log a_t = -c * softplus(Λ) * r_t
+  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Full sequences use an associative scan (O(log L) depth); decode is a single
+fused step.  Recurrence math in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init(key, cfg):
+    d, dr = cfg.d_model, cfg.resolved_d_rnn
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 6)
+    # Λ init so that a^c ~ uniform(0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(keys[5], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / cfg.rglru_c))  # inv softplus
+    return {
+        "proj_rec": dense_init(keys[0], (d, dr), dt),
+        "proj_gate": dense_init(keys[1], (d, dr), dt),
+        "conv_w": dense_init(keys[2], (cfg.conv_width, dr), dt,
+                             in_axis_size=cfg.conv_width),
+        "conv_b": jnp.zeros((dr,), dt),
+        "w_a": dense_init(keys[3], (dr, dr), jnp.float32),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": dense_init(keys[4], (dr, dr), jnp.float32),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (dr, d), dt,
+                               in_axis_size=dr),
+    }
+
+
+def _causal_conv(x, w, b):
+    wsize = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, wsize):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _gates(params, cfg, xr):
+    """xr (..., dr) f32 -> (a, gated_input) both f32."""
+    r = jax.nn.sigmoid(xr @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(xr @ params["w_x"] + params["b_x"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) * (i * xr)
+    return a, b
+
+
+def forward(params, cfg, x, init_h=None, impl="ref"):
+    """x (B,L,d) -> y (B,L,d)."""
+    xr = _causal_conv(jnp.einsum("bld,dr->blr", x, params["proj_rec"]),
+                      params["conv_w"], params["conv_b"]).astype(jnp.float32)
+    gate = jax.nn.gelu(jnp.einsum("bld,dr->blr", x, params["proj_gate"])
+                       .astype(jnp.float32))
+
+    a, b = _gates(params, cfg, xr)
+    if init_h is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * init_h.astype(jnp.float32))
+
+    if impl == "pallas":
+        from repro.kernels.rglru_scan import ops as scan_ops
+        h = scan_ops.linear_scan(a, b)
+    else:
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate).astype(x.dtype)
+    return jnp.einsum("blr,rd->bld", y, params["out_proj"]), h[:, -1]
+
+
+def prefill(params, cfg, x):
+    """Forward + cache capture (recurrent state + conv history)."""
+    xr1 = jnp.einsum("bld,dr->blr", x, params["proj_rec"])  # pre-conv
+    xr = _causal_conv(xr1, params["conv_w"], params["conv_b"]).astype(jnp.float32)
+    gate = jax.nn.gelu(jnp.einsum("bld,dr->blr", x, params["proj_gate"])
+                       .astype(jnp.float32))
+    a, b = _gates(params, cfg, xr)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate).astype(x.dtype)
+    y = jnp.einsum("blr,rd->bld", y, params["out_proj"])
+
+    w = cfg.conv_width - 1
+    s = x.shape[1]
+    hist = xr1[:, -w:, :] if s >= w else jnp.pad(xr1, ((0, 0), (w - s, 0), (0, 0)))
+    return y, {"conv": hist, "h": h[:, -1]}
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg, batch, dtype=None):
+    dr = cfg.resolved_d_rnn
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dt),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def decode_step(params, cfg, x, cache):
+    """x (B,1,d) -> (y (B,1,d), cache)."""
+    xr1 = jnp.einsum("bld,dr->blr", x, params["proj_rec"])[:, 0]  # (B,dr)
+    hist = jnp.concatenate([cache["conv"], xr1[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwr,wr->br", hist, params["conv_w"]) + params["conv_b"]
+    xr = conv_out.astype(jnp.float32)
+    gate = jax.nn.gelu(jnp.einsum("bld,dr->blr", x, params["proj_gate"])
+                       [:, 0].astype(jnp.float32))
+
+    a, b = _gates(params, cfg, xr)
+    h = a * cache["h"] + b
+    y = (h * gate).astype(x.dtype)
+    y = jnp.einsum("br,rd->bd", y, params["out_proj"])[:, None, :]
+    return y, {"conv": hist[:, 1:, :], "h": h}

@@ -1,0 +1,160 @@
+"""Mamba-2 block: in_proj -> causal depthwise conv -> SSD -> gated norm ->
+out_proj.  The SSD scan itself lives in ``repro.kernels.ssd`` (ref oracle +
+Pallas TPU kernel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ref as ssd_ref
+from repro.models.common import dense_init, rms_norm
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    n = cfg.d_state
+    h = cfg.n_ssd_heads
+    d_conv = di + 2 * n  # conv runs over [x, B, C]
+    return di, n, h, d_conv
+
+
+def init(key, cfg):
+    d = cfg.d_model
+    di, n, h, d_conv = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    import numpy as np
+    # dt bias init so softplus(dt_bias) spans ~[1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(keys[2], (h,), jnp.float32)
+    dt_init = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di + 2 * n + h), dt),
+        "conv_w": dense_init(keys[1], (cfg.conv_width, d_conv), dt,
+                             in_axis_size=cfg.conv_width),
+        "conv_b": jnp.zeros((d_conv,), dt),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": dense_init(keys[3], (di, d), dt, in_axis_size=di),
+    }
+
+
+def _split(cfg, zxbcdt):
+    di, n, h, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv via shifted adds. xbc (B,L,Dc); w (W,Dc)."""
+    wsize = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, wsize):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def forward(params, cfg, x, impl="ref"):
+    """Full-sequence SSD mixer. x (B,L,d) -> y (B,L,d)."""
+    b, l, d = x.shape
+    di, n, h, _ = _dims(cfg)
+    p = cfg.ssd_head_dim
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc, dt_raw = _split(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(b, l, h, p)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if impl == "pallas":
+        from repro.kernels.ssd import ops as ssd_ops
+        y, _ = ssd_ops.ssd(xs, dt, A, B, C, params["D"], chunk=cfg.ssd_chunk)
+    else:
+        y, _ = ssd_ref.ssd_chunked(xs, dt, A, B, C, params["D"],
+                                   chunk=min(cfg.ssd_chunk, l))
+    y = y.reshape(b, l, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+
+def prefill(params, cfg, x, impl="ref"):
+    """Forward + cache capture (SSD state + conv history)."""
+    b, l, d = x.shape
+    di, n, h, _ = _dims(cfg)
+    p = cfg.ssd_head_dim
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc_raw, dt_raw = _split(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(b, l, h, p)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    chunk = min(cfg.ssd_chunk, l)
+    if l % chunk:
+        y, state = ssd_ref.ssd_sequential(xs, dt, A, B, C, params["D"])
+    else:
+        y, state = ssd_ref.ssd_chunked(xs, dt, A, B, C, params["D"], chunk=chunk)
+    y = y.reshape(b, l, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"], cfg.norm_eps)
+    y = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+    w = cfg.conv_width - 1
+    hist = (xbc_raw[:, -w:, :] if l >= w
+            else jnp.pad(xbc_raw, ((0, 0), (w - l, 0), (0, 0))))
+    return y, {"conv": hist, "state": state}
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg, batch, dtype=None):
+    di, n, h, d_conv = _dims(cfg)
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_conv), dt),
+        "state": jnp.zeros((batch, h, cfg.ssd_head_dim, n), jnp.float32),
+    }
+
+
+def decode_step(params, cfg, x, cache):
+    """x (B,1,d) -> (y (B,1,d), cache)."""
+    b = x.shape[0]
+    di, n, h, d_conv = _dims(cfg)
+    p = cfg.ssd_head_dim
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])[:, 0]
+    z, xbc, dt_raw = _split(cfg, zxbcdt[:, None, :])
+    xbc = xbc[:, 0]
+
+    # conv over [stored history, current]
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,W,Dc)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+
+    xs = conv_out[:, :di].reshape(b, h, p)
+    B = conv_out[:, di:di + n]
+    C = conv_out[:, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, new_state = ssd_ref.ssd_decode_step(xs, dt, A, B, C, params["D"],
+                                           cache["state"])
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"], cfg.norm_eps)
+    y = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return y, {"conv": new_conv, "state": new_state}

@@ -1,0 +1,1 @@
+from repro.serving import engine, scheduler, split_runtime  # noqa: F401

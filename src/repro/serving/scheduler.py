@@ -1,0 +1,74 @@
+"""ERA-driven admission / placement scheduler.
+
+Ties the paper's algorithm into the serving stack: given a scenario
+(channel state), a split profile for the served model, and per-user QoE
+thresholds, it runs Li-GD and emits a Schedule: per-user split point,
+subchannel, tx power, edge compute share, plus predicted latency/energy/QoE
+— the numbers the engine uses to simulate the radio and to group edge-side
+batches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import era, ligd, noma, profiles
+from repro.core.era import Weights
+
+
+@dataclass
+class Schedule:
+    split: np.ndarray            # (U,) block index
+    subchannel_up: np.ndarray    # (U,)
+    subchannel_dn: np.ndarray    # (U,)
+    power_up: np.ndarray         # (U,) W
+    power_dn: np.ndarray         # (U,) W
+    compute_units: np.ndarray    # (U,) r_i
+    pred_latency: np.ndarray     # (U,) s
+    pred_energy: np.ndarray      # (U,) J
+    uplink_rate: np.ndarray      # (U,) bit/s
+    downlink_rate: np.ndarray    # (U,) bit/s
+    gamma: float
+    iters: int
+
+    def groups(self) -> Dict[int, np.ndarray]:
+        """Users grouped by split point (edge batches share a split)."""
+        return {int(s): np.nonzero(self.split == s)[0]
+                for s in np.unique(self.split)}
+
+
+class EraScheduler:
+    def __init__(self, scn, prof: profiles.SplitProfile,
+                 weights: Weights = Weights(), *, per_user_split=True,
+                 max_steps=400, lr=0.05):
+        self.scn = scn
+        self.prof = prof
+        self.weights = weights
+        self.per_user_split = per_user_split
+        self.max_steps = max_steps
+        self.lr = lr
+
+    def schedule(self, q_thresholds) -> Schedule:
+        out = ligd.solve(self.scn, self.prof, jnp.asarray(q_thresholds),
+                         self.weights, per_user_split=self.per_user_split,
+                         max_steps=self.max_steps, lr=self.lr)
+        alloc = out.alloc
+        r_up = noma.uplink_rates(self.scn, alloc.beta_up, alloc.p)
+        r_dn = noma.downlink_rates(self.scn, alloc.beta_dn, alloc.p_ap)
+        return Schedule(
+            split=np.asarray(out.s),
+            subchannel_up=np.asarray(jnp.argmax(alloc.beta_up, 1)),
+            subchannel_dn=np.asarray(jnp.argmax(alloc.beta_dn, 1)),
+            power_up=np.asarray(alloc.p),
+            power_dn=np.asarray(alloc.p_ap),
+            compute_units=np.asarray(alloc.r),
+            pred_latency=np.asarray(out.terms.t),
+            pred_energy=np.asarray(out.terms.e),
+            uplink_rate=np.asarray(r_up),
+            downlink_rate=np.asarray(r_dn),
+            gamma=float(out.terms.gamma),
+            iters=out.total_iters,
+        )

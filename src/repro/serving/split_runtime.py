@@ -1,0 +1,70 @@
+"""Split-inference runtime — the execution layer underneath ERA.
+
+The model is cut at block boundary ``s``: the *device side* runs
+embedding + blocks[0:s]; the *edge side* runs blocks[s:F] + final norm +
+LM head.  The tensor that crosses the (simulated) NOMA link is the residual
+stream (B,S,d) (+ recurrent state bytes for rec/ssd blocks — see
+core.profiles).
+
+``layer_params(params, cfg, i)`` resolves block i out of the scanned unit
+stack, so the same weights serve both the fused full-model path (training,
+dry-run) and the split path (serving).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models import transformer as T
+from repro.models.common import positions_for
+
+
+def layer_params(params, cfg, i):
+    """Block i's parameter subtree (units are stacked on axis 0)."""
+    u, pos = divmod(i, cfg.pattern_len)
+    if u < cfg.n_units:
+        unit_tree = jax.tree.map(lambda x: x[u], params["units"])
+        return unit_tree[pos], cfg.pattern[pos]
+    j = i - cfg.n_units * cfg.pattern_len
+    return params["tail"][j], cfg.tail_specs[j]
+
+
+def forward_range(params, cfg, x, positions, start: int, end: int,
+                  impl="naive"):
+    """Apply blocks [start, end) to the residual stream x."""
+    for i in range(start, end):
+        p_i, spec = layer_params(params, cfg, i)
+        x, _ = blocks.forward(p_i, cfg, spec, x, positions, impl=impl)
+    return x
+
+
+def device_forward(params, cfg, tokens, split: int, vision_embeds=None,
+                   positions=None, impl="naive"):
+    """Device side: embed + blocks[0:split]. Returns the crossing tensor."""
+    x = T.embed_tokens(params, cfg, tokens, vision_embeds)
+    if positions is None:
+        positions = positions_for(cfg, x.shape[0], x.shape[1])
+    x = forward_range(params, cfg, x, positions, 0, split, impl=impl)
+    return x, positions
+
+
+def edge_forward(params, cfg, x, positions, split: int, impl="naive"):
+    """Edge side: blocks[split:F] + head. Returns logits."""
+    x = forward_range(params, cfg, x, positions, split, cfg.n_layers,
+                      impl=impl)
+    return T.lm_logits(params, cfg, x)
+
+
+def split_inference(params, cfg, tokens, split: int, vision_embeds=None,
+                    impl="naive"):
+    """Full split pipeline (reference path; the engine adds the channel).
+
+    Returns (logits, crossing_bits)."""
+    x, positions = device_forward(params, cfg, tokens, split,
+                                  vision_embeds=vision_embeds, impl=impl)
+    crossing_bits = float(x.size) * x.dtype.itemsize * 8
+    logits = edge_forward(params, cfg, x, positions, split, impl=impl)
+    return logits, crossing_bits

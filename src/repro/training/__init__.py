@@ -1,0 +1,1 @@
+from repro.training import checkpoint, losses, optim  # noqa: F401

@@ -1,0 +1,61 @@
+"""Pytree checkpointing: np.savez shards + JSON manifest (no orbax in the
+container).  Works for any pytree of arrays (train state, caches, ERA
+allocations)."""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path, tree, step: int = 0, extra: dict | None = None):
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(path / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "shapes": [list(np.asarray(x).shape) for x in leaves],
+        "extra": extra or {},
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+
+def restore(path, like_tree):
+    """Restore into the structure of ``like_tree`` (shape/dtype checked)."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    leaves, treedef = _flatten(like_tree)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError(
+            f"leaf count mismatch: ckpt {manifest['n_leaves']} vs "
+            f"model {len(leaves)}")
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"leaf {i} shape {arr.shape} != {np.shape(ref)}")
+        new_leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["step"]
+
+
+def latest_step_dir(root):
+    root = Path(root)
+    if not root.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[-1]) for p in root.glob("step_*"))
+    return root / f"step_{steps[-1]}" if steps else None

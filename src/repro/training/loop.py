@@ -1,0 +1,56 @@
+"""Training loop: data pipeline -> jitted train step -> metrics/checkpoints.
+
+Used by examples/train_small.py (e2e CPU demo) and launch/train.py (the
+production launcher that runs the same loop under a mesh).
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.data import pipeline
+from repro.launch.steps import init_train_state, make_train_step
+from repro.training import checkpoint, optim
+
+
+def train(cfg, *, steps=50, seq_len=128, global_batch=8,
+          opt_cfg: Optional[optim.AdamWConfig] = None,
+          ckpt_dir: Optional[str] = None, ckpt_every=0, log_every=10,
+          impl="naive", microbatches=1, constrain=None, seed=0,
+          resume=False):
+    """Returns (final_state, history)."""
+    opt_cfg = opt_cfg or optim.AdamWConfig(
+        lr=1e-3, warmup_steps=max(steps // 10, 1), total_steps=steps)
+    data = pipeline.for_config(cfg, seq_len, global_batch, seed=seed)
+    state = init_train_state(cfg, jax.random.PRNGKey(seed))
+    start = 0
+    if resume and ckpt_dir:
+        last = checkpoint.latest_step_dir(ckpt_dir)
+        if last is not None:
+            state, start = checkpoint.restore(last, state)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, impl=impl,
+                                      microbatches=microbatches,
+                                      constrain=constrain),
+                      donate_argnums=(0,))
+    history = []
+    t0 = time.time()
+    for i in range(start, steps):
+        batch = data.batch(0, i)
+        state, metrics = step_fn(state, batch)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = round(time.time() - t0, 2)
+            history.append(m)
+            print(f"step {i:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}", flush=True)
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            checkpoint.save(Path(ckpt_dir) / f"step_{i+1}", state, step=i + 1)
+    if ckpt_dir:
+        checkpoint.save(Path(ckpt_dir) / f"step_{steps}", state, step=steps)
+    return state, history

@@ -1,0 +1,34 @@
+"""Next-token cross-entropy with vocab padding + ignore-index masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -1
+
+
+def cross_entropy(logits, labels, vocab_size):
+    """logits (..., Vp) f32; labels (...) int32 with IGNORE for masked
+    positions (e.g. stub vision tokens).  Padded-vocab columns are excluded
+    from the partition function."""
+    vp = logits.shape[-1]
+    if vp > vocab_size:
+        pad_mask = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    valid = labels != IGNORE
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def lm_loss(cfg, logits, labels):
+    """Dispatch on architecture family.
+
+    text/vlm: logits (B,S,Vp), labels (B,S)
+    audio:    logits (B,S,K,V), labels (B,K,S) — mean over codebooks."""
+    if cfg.n_codebooks > 1:
+        lab = jnp.swapaxes(labels, 1, 2)  # (B,S,K)
+        return cross_entropy(logits, lab, cfg.vocab_size)
+    return cross_entropy(logits, labels, cfg.vocab_size)

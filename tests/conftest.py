@@ -1,0 +1,9 @@
+import os
+
+# tests run on the single real CPU device (the 512-device override is
+# strictly dryrun.py's); keep XLA quiet and deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

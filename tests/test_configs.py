@@ -1,0 +1,64 @@
+"""The 10 assigned architecture configs match the assignment table exactly,
+and every tiny variant obeys the smoke-test contract (≤512 d_model, ≤4
+experts, same family)."""
+import pytest
+
+from repro.configs import get_config, get_tiny_config, list_architectures
+
+ASSIGNED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab, experts, top_k)
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352, 16, 4),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256, 0, 0),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768, 8, 2),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000, 0, 0),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064, 0, 0),
+    "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544, 0, 0),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048, 0, 0),
+    "gemma3-12b": (48, 3840, 16, 8, 15360, 262144, 0, 0),
+    "gemma-2b": (18, 2048, 8, 1, 16384, 256000, 0, 0),
+    "mamba2-780m": (48, 1536, 0, 0, 0, 50280, 0, 0),
+}
+
+
+def test_all_assigned_present():
+    assert sorted(ASSIGNED) == list_architectures()
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_exact_config(name):
+    l, d, h, kv, ff, v, e, k = ASSIGNED[name]
+    cfg = get_config(name)
+    assert cfg.n_layers == l and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+    assert cfg.n_experts == e and cfg.top_k == k
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_tiny_contract(name):
+    cfg = get_tiny_config(name)
+    full = get_config(name)
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= max(3, len(full.pattern))
+    assert cfg.n_experts <= 4
+    assert cfg.arch_type == full.arch_type
+    # same family: mixers used must be a subset of the full pattern's
+    assert {m for m, _ in cfg.pattern} <= {m for m, _ in full.pattern}
+
+
+def test_arch_specifics():
+    assert get_config("mamba2-780m").d_state == 128
+    assert get_config("mamba2-780m").is_subquadratic
+    assert get_config("mixtral-8x22b").window == 4096
+    assert get_config("gemma-2b").resolved_head_dim == 256
+    g3 = get_config("gemma3-12b")
+    locals_, globals_ = (sum(1 for m, _ in g3.pattern if m == k)
+                         for k in ("local", "attn"))
+    assert locals_ == 5 and globals_ == 1          # 5:1 local:global
+    rg = get_config("recurrentgemma-2b")
+    recs = sum(1 for m, _ in rg.pattern if m == "rec")
+    assert recs == 2 and rg.pattern_len == 3       # 1:2 attn:rec
+    assert get_config("musicgen-medium").n_codebooks == 4
+    assert get_config("qwen2-vl-72b").mrope_sections == (16, 24, 24)
+    # vocab padding keeps the model axis divisible
+    assert get_config("mamba2-780m").padded_vocab % 256 == 0

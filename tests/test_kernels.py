@@ -1,0 +1,116 @@
+"""Pallas kernel sweeps vs their ref.py oracles (interpret mode on CPU —
+kernels target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.noma_rate import ref as nr_ref
+from repro.kernels.noma_rate.kernel import noma_rate
+from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
+
+
+FLASH_CASES = [
+    # b, s, h, kh, d, window, dtype
+    (2, 256, 4, 2, 64, 0, jnp.float32),
+    (1, 512, 8, 8, 128, 0, jnp.float32),
+    (2, 256, 4, 1, 64, 128, jnp.float32),
+    (1, 384, 6, 2, 64, 0, jnp.float32),
+    (1, 256, 4, 2, 128, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,kh,d,window,dtype", FLASH_CASES)
+def test_flash_attention_sweep(b, s, h, kh, d, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, d), dtype)
+    want = fa_ref.attention_ref(q, k, v, causal=True, window=window)
+    got = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                 bq=128, bk=128)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+SSD_CASES = [
+    (2, 128, 4, 32, 32, 32, jnp.float32),
+    (1, 256, 8, 64, 128, 64, jnp.float32),
+    (2, 512, 4, 64, 128, 256, jnp.float32),
+    (1, 128, 4, 32, 64, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("bt,l,h,p,n,chunk,dtype", SSD_CASES)
+def test_ssd_kernel_sweep(bt, l, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (bt, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, l, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b = jax.random.normal(ks[3], (bt, l, n)) * 0.3
+    c = jax.random.normal(ks[4], (bt, l, n)) * 0.3
+    d = jnp.ones((h,))
+    y_ref, s_ref = ssd_ref.ssd_sequential(x, dt, a, b, c, d)
+    y_ker, s_ker = ssd_ops.ssd(x, dt, a, b, c, d, chunk=chunk)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_ker, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s_ker), np.asarray(s_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_decode_consistency():
+    """Sequential decode steps equal the full-sequence scan."""
+    bt, l, h, p, n = 1, 16, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (bt, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, l, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b = jax.random.normal(ks[3], (bt, l, n)) * 0.3
+    c = jax.random.normal(ks[4], (bt, l, n)) * 0.3
+    d = jnp.zeros((h,))
+    y_full, s_full = ssd_ref.ssd_sequential(x, dt, a, b, c, d)
+    state = jnp.zeros((bt, h, p, n))
+    ys = []
+    for t in range(l):
+        y_t, state = ssd_ref.ssd_decode_step(
+            x[:, t], dt[:, t], a, b[:, t], c[:, t], d, state)
+        ys.append(y_t)
+    y_steps = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_full),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,u,bm", [(8, 32, 4), (16, 64, 8), (12, 48, 8)])
+def test_noma_rate_kernel_sweep(m, u, bm):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    contrib = jax.random.uniform(ks[0], (m, u))
+    sig = jax.random.uniform(ks[1], (m, u))
+    inter = jax.random.uniform(ks[2], (m, u)) + 0.1
+    gend = jnp.maximum(jnp.sort(jax.random.randint(ks[3], (m, u), 0, u), 1),
+                       jnp.arange(u)[None, :])
+    want = nr_ref.noma_rate_ref(contrib, sig, gend, inter, 2e6)
+    got = noma_rate(contrib, sig, gend, inter, bw=2e6, bm=bm, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_noma_kernel_matches_core():
+    from repro.core import network, noma
+    from repro.kernels.noma_rate import ops as nops
+    cfg = network.small_config(n_users=24, n_subchannels=8)
+    scn = network.make_scenario(jax.random.PRNGKey(4), cfg)
+    key = jax.random.PRNGKey(5)
+    beta = jax.random.uniform(key, (cfg.n_users, cfg.n_subchannels))
+    beta = beta / beta.sum(1, keepdims=True)
+    p = jnp.full((cfg.n_users,), 0.1)
+    want = noma.uplink_rates(scn, beta, p)
+    got = nops.uplink_rates_kernel(scn, beta, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4)

@@ -1,0 +1,98 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import era, network, profiles, qoe
+from repro.training import losses
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 9), st.floats(0.01, 10.0), st.floats(10.0, 2000.0))
+def test_qoe_indicator_monotone_in_latency(seed, q, a):
+    """R(T/Q) is nondecreasing in T for any threshold/sharpness."""
+    t = jnp.linspace(0.0, 5.0 * q, 64)
+    r = np.asarray(qoe.indicator(t, jnp.asarray(q), a))
+    assert (np.diff(r) >= -1e-6).all()
+    assert (r >= 0).all() and (r <= 1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 5))
+def test_profile_split_conservation(arch_idx):
+    """device_flops[s] + edge_flops[s] == total for every split point."""
+    from repro.configs import list_architectures
+    names = ["nin", "vgg16", "yolov2"] + list(list_architectures())[:3]
+    prof = profiles.get_profile(names[arch_idx], **(
+        {"seq": 32} if names[arch_idx] not in ("nin", "vgg16", "yolov2")
+        else {}))
+    total = float(jnp.sum(prof.layer_flops))
+    s = np.arange(prof.n_layers + 1)
+    dev = np.asarray(prof.device_flops)[s]
+    edge = np.asarray(prof.edge_flops)[s]
+    np.testing.assert_allclose(dev + edge, total, rtol=1e-5)
+    assert (np.diff(dev) >= 0).all()  # device work grows with s
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100))
+def test_clip_alloc_idempotent(seed):
+    cfg = network.small_config(n_users=8, n_subchannels=4)
+    scn = network.make_scenario(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(seed)
+    raw = era.Allocation(
+        beta_up=jax.random.normal(key, (8, 4)) * 3,
+        beta_dn=jax.random.normal(jax.random.fold_in(key, 1), (8, 4)) * 3,
+        p=jax.random.normal(jax.random.fold_in(key, 2), (8,)),
+        p_ap=jax.random.normal(jax.random.fold_in(key, 3), (8,)) * 5,
+        r=jax.random.normal(jax.random.fold_in(key, 4), (8,)) * 100,
+    )
+    once = era.clip_alloc(scn, raw)
+    twice = era.clip_alloc(scn, once)
+    for a, b in zip(once, twice):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 50))
+def test_cross_entropy_uniform_logits(vocab, n):
+    """CE of uniform logits == log(V) regardless of labels."""
+    logits = jnp.zeros((1, n, vocab))
+    labels = jnp.arange(n, dtype=jnp.int32)[None, :] % vocab
+    ce = float(losses.cross_entropy(logits, labels, vocab))
+    np.testing.assert_allclose(ce, np.log(vocab), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_data_pipeline_deterministic(idx):
+    from repro.configs import get_tiny_config
+    from repro.data import pipeline
+    data = pipeline.for_config(get_tiny_config("llama3-8b"), 16, 2)
+    a = data.batch(0, idx)
+    b = data.batch(0, idx)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = data.batch(0, idx + 1)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.05, 0.9), st.floats(1.0, 60.0))
+def test_energy_increases_with_compute_allocation(frac, r_val):
+    """eq. (21): edge energy is increasing in the allocated rate λ(r)."""
+    cfg = network.small_config(n_users=6, n_subchannels=4)
+    scn = network.make_scenario(jax.random.PRNGKey(1), cfg)
+    prof = profiles.get_profile("nin")
+    alloc = era.uniform_alloc(scn)
+    s = jnp.full((6,), 2, jnp.int32)
+    q = jnp.full((6,), 0.5)
+    t1 = era.utility(scn, prof, s, alloc._replace(r=jnp.full((6,), r_val)),
+                     q, era.Weights())
+    t2 = era.utility(scn, prof, s,
+                     alloc._replace(r=jnp.full((6,), r_val + 2.0)), q,
+                     era.Weights())
+    assert float(t2.e.sum()) >= float(t1.e.sum()) - 1e-9
+    assert float(t2.t.sum()) <= float(t1.t.sum()) + 1e-9  # latency falls

@@ -1,0 +1,64 @@
+"""Serving substrate: split == fused logits, ERA schedule structure, full
+serve round, latency decomposition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny_config
+from repro.core import network, profiles
+from repro.models import transformer as T
+from repro.serving.engine import SplitServeEngine
+from repro.serving.scheduler import EraScheduler
+from repro.serving.split_runtime import split_inference
+
+
+@pytest.mark.parametrize("name", ["llama3-8b", "gemma3-12b", "mamba2-780m"])
+def test_split_equals_fused(name):
+    cfg = get_tiny_config(name).replace(dtype="float32")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    full, _ = T.forward(params, cfg, tokens)
+    for s in (0, 1, cfg.n_layers // 2, cfg.n_layers):
+        logits, bits = split_inference(params, cfg, tokens, s)
+        rel = float(jnp.max(jnp.abs(logits - full))) / (
+            float(jnp.max(jnp.abs(full))) + 1e-9)
+        assert rel < 1e-4, (s, rel)
+        if 0 < s < cfg.n_layers:
+            assert bits > 0
+
+
+def test_schedule_and_serve_round():
+    cfg = get_tiny_config("gemma-2b").replace(dtype="float32")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    ncfg = network.small_config(n_users=8, n_subchannels=4)
+    scn = network.make_scenario(jax.random.PRNGKey(1), ncfg)
+    prof = profiles.transformer_profile(cfg, seq=16)
+    sched = EraScheduler(scn, prof, max_steps=50)
+    engine = SplitServeEngine(params, cfg, scn, prof, sched)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0,
+                              cfg.vocab_size)
+    res = engine.serve_round(np.asarray(toks), np.full(8, 0.1),
+                             decode_steps=3)
+    assert len(res) == 8
+    users = {r.user for r in res}
+    assert users == set(range(8))
+    for r in res:
+        np.testing.assert_allclose(
+            r.latency_s,
+            r.t_device + r.t_uplink + r.t_edge + r.t_downlink, rtol=1e-6)
+        assert r.latency_s > 0
+        assert r.tokens_out.shape == (3,)
+
+
+def test_schedule_groups_partition_users():
+    cfg = get_tiny_config("llama3-8b").replace(dtype="float32")
+    ncfg = network.small_config(n_users=10, n_subchannels=5)
+    scn = network.make_scenario(jax.random.PRNGKey(3), ncfg)
+    prof = profiles.transformer_profile(cfg, seq=16)
+    sched = EraScheduler(scn, prof, max_steps=40).schedule(np.full(10, 0.05))
+    all_users = np.concatenate(list(sched.groups().values()))
+    assert sorted(all_users.tolist()) == list(range(10))
+    assert (sched.compute_units >= scn.cfg.r_min).all()
+    assert (sched.power_up <= scn.cfg.p_max_w + 1e-9).all()

@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests: the full ERA pipeline on the paper's own CNN
+profiles, paper-claim directional checks, and dry-run artifact validation."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, ligd, network, profiles
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    scn = network.make_scenario(jax.random.PRNGKey(0),
+                                network.small_config(n_users=24,
+                                                     n_subchannels=8))
+    prof = profiles.get_profile("yolov2")
+    q = jnp.full((24,), 0.4)
+    return scn, prof, q
+
+
+def test_era_beats_device_only_latency(setup):
+    """Fig. 6 direction: ERA latency speedup over Device-Only ≫ 1."""
+    scn, prof, q = setup
+    era_out = ligd.solve(scn, prof, q, max_steps=200)
+    dev = baselines.device_only(scn, prof, q)
+    speedup = float(dev.terms.t.mean()) / float(era_out.terms.t.mean())
+    assert speedup > 2.0, speedup
+
+
+def test_era_saves_energy_vs_edge_only(setup):
+    """Fig. 7 direction: ERA energy ≪ Edge-Only's."""
+    scn, prof, q = setup
+    era_out = ligd.solve(scn, prof, q, max_steps=200)
+    edge = baselines.edge_only(scn, prof, q)
+    assert float(era_out.terms.e.mean()) < float(edge.terms.e.mean())
+
+
+def test_qoe_relaxation_saves_energy(setup):
+    """Fig. 8/9 direction: relaxing the QoE threshold reduces energy."""
+    scn, prof, _ = setup
+    tight = ligd.solve(scn, prof, jnp.full((24,), 0.15), max_steps=200)
+    loose = ligd.solve(scn, prof, jnp.full((24,), 0.6), max_steps=200)
+    assert float(loose.terms.e.sum()) <= float(tight.terms.e.sum()) * 1.05
+
+
+def test_violations_fall_with_expected_finish_time(setup):
+    """Fig. 10 direction: z decreases as the expected finish time grows."""
+    scn, prof, _ = setup
+    zs = []
+    for q_s in (0.05, 0.3, 1.5):
+        out = ligd.solve(scn, prof, jnp.full((24,), q_s), max_steps=150)
+        zs.append(float(out.terms.z))
+    assert zs[0] >= zs[1] >= zs[2]
+    assert zs[2] < 1.0
+
+
+# --------------------------------------------------------------------------- #
+# dry-run artifacts (deliverable e): every applicable pair must have lowered
+# and compiled on BOTH production meshes
+# --------------------------------------------------------------------------- #
+def _expected_pairs():
+    from repro.configs import get_config, list_architectures
+    from repro.launch.steps import SHAPES, shape_applicable
+    return [(a, s) for a in list_architectures() for s in SHAPES
+            if shape_applicable(get_config(a), s)]
+
+
+@pytest.mark.skipif(not DRYRUN.exists(), reason="dry-run not generated yet")
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_dryrun_artifacts_complete_and_ok(mesh):
+    pairs = _expected_pairs()
+    assert len(pairs) == 34  # 10×3 + 4 long_500k-capable (DESIGN.md skips)
+    missing, failed = [], []
+    for arch, shape in pairs:
+        f = DRYRUN / f"{arch}.{shape}.{mesh}.json"
+        if not f.exists():
+            missing.append(f.name)
+            continue
+        rec = json.loads(f.read_text())
+        if not rec.get("ok"):
+            failed.append(f.name)
+    assert not missing, missing
+    assert not failed, failed
+
+
+@pytest.mark.skipif(not DRYRUN.exists(), reason="dry-run not generated yet")
+def test_dryrun_memory_fits_single_pod():
+    for arch, shape in _expected_pairs():
+        f = DRYRUN / f"{arch}.{shape}.16x16.json"
+        if not f.exists():
+            continue
+        rec = json.loads(f.read_text())
+        if rec.get("ok"):
+            assert rec["mem"]["fits_16gib"], (arch, shape,
+                                              rec["mem"]["per_chip_bytes"])
