@@ -1,0 +1,17 @@
+# Tier-1 verification targets.  `make test-fast` skips the interpret-mode
+# Pallas kernel sweeps (marked slow) — the bulk of the suite's wall clock.
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench bench-quick
+
+test:
+	$(PY) -m pytest -q
+
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick

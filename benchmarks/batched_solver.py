@@ -1,0 +1,96 @@
+"""Tentpole metrics: scan-compiled F+1 sweep vs the sequential reference
+path (the seed's per-layer dispatch structure, compiled_sweep=False), and
+one vmapped B-cell solve vs a Python loop of single-cell solves.
+
+All timings are medians of warmed-up calls (compile time excluded).  The
+solver configuration is the serving default (ERA+ per-user split — what
+EraScheduler/MultiCellScheduler run per admission round); the plain
+landscape sweep (per_user_split=False) is recorded alongside for
+transparency, as is the batched gain over a loop of already-compiled
+single-cell solves (the dispatch-only component of the win).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import ligd, network, profiles
+
+B_CELLS = 8
+
+
+def _median_time(fn, n=5):
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6        # µs
+
+
+def run(quick=False):
+    cfg = network.small_config(n_users=8, n_subchannels=4)
+    scn = network.make_scenario(jax.random.PRNGKey(0), cfg)
+    prof = profiles.get_profile("nin")
+    q = jnp.full((cfg.n_users,), 0.4)
+    reps = 3 if quick else 5
+
+    # ---- single cell: compiled sweep vs sequential reference ------------
+    for per_user, tag in ((True, "era_plus"), (False, "landscape")):
+        kw = dict(max_steps=400, per_user_split=per_user)
+        ligd.solve(scn, prof, q, compiled_sweep=False, **kw)   # warm both
+        ligd.solve(scn, prof, q, compiled_sweep=True, **kw)
+        us_seq = _median_time(
+            lambda: ligd.solve(scn, prof, q, compiled_sweep=False, **kw),
+            reps)
+        us_scan = _median_time(
+            lambda: ligd.solve(scn, prof, q, compiled_sweep=True, **kw),
+            reps)
+        emit(f"batched.sweep_seq_us.{tag}", us_seq, "")
+        emit(f"batched.sweep_scan_us.{tag}", us_scan, "")
+        emit(f"batched.sweep_speedup.{tag}", 0.0,
+             f"{us_seq / us_scan:.2f}x")
+
+    # numerical agreement of the two paths (acceptance: 1e-5)
+    seq = ligd.solve(scn, prof, q, max_steps=400, compiled_sweep=False)
+    fused = ligd.solve(scn, prof, q, max_steps=400, compiled_sweep=True)
+    rel = float(np.max(np.abs(fused.gamma_by_layer - seq.gamma_by_layer)
+                       / (np.abs(seq.gamma_by_layer) + 1e-12)))
+    emit("batched.sweep_gamma_rel_err", 0.0, f"{rel:.2e}")
+    emit("batched.sweep_s_star_match", 0.0,
+         str(bool((fused.s == seq.s).all())))
+
+    # ---- B cells: one vmapped solve vs Python loops ---------------------
+    # max_steps=120 is the serving configuration (launch/serve.py) — it
+    # also bounds the vmapped while-loop's lockstep tail (all lanes run
+    # until the slowest cell's layer converges)
+    b = 2 if quick else B_CELLS
+    scns = [network.make_scenario(jax.random.PRNGKey(i), cfg)
+            for i in range(b)]
+    qs = jnp.stack([q] * b)
+    kw = dict(max_steps=120, per_user_split=True)
+
+    ligd.solve_batch(scns, prof, qs, **kw)                     # warm
+    [ligd.solve(s, prof, q, compiled_sweep=False, **kw) for s in scns]
+    [ligd.solve(s, prof, q, compiled_sweep=True, **kw) for s in scns]
+
+    us_batch = _median_time(
+        lambda: ligd.solve_batch(scns, prof, qs, **kw), reps)
+    us_loop_seed = _median_time(
+        lambda: [ligd.solve(s, prof, q, compiled_sweep=False, **kw)
+                 for s in scns], reps)
+    us_loop_scan = _median_time(
+        lambda: [ligd.solve(s, prof, q, compiled_sweep=True, **kw)
+                 for s in scns], reps)
+
+    emit(f"batched.cells{b}_batch_us", us_batch, "")
+    emit(f"batched.cells{b}_loop_us", us_loop_seed, "")
+    emit(f"batched.cells{b}_loop_compiled_us", us_loop_scan, "")
+    emit(f"batched.cells{b}_throughput_gain", 0.0,
+         f"{us_loop_seed / us_batch:.2f}x")
+    emit(f"batched.cells{b}_gain_vs_compiled_loop", 0.0,
+         f"{us_loop_scan / us_batch:.2f}x")

@@ -14,6 +14,14 @@ def run(quick=False):
         warm, us_w = timed(ligd.solve, scn, prof, q, max_steps=400)
         cold, us_c = timed(ligd.solve, scn, prof, q, max_steps=400,
                            warm_start=False)
+        # tentpole: scan-compiled sweep vs the per-layer reference loop
+        # (both warmed by the calls above / below)
+        ligd.solve(scn, prof, q, max_steps=400, compiled_sweep=False)
+        _, us_seq = timed(ligd.solve, scn, prof, q, max_steps=400,
+                          compiled_sweep=False)
+        _, us_scan = timed(ligd.solve, scn, prof, q, max_steps=400)
+        emit(f"ligd.scan_sweep_speedup.{model}", us_scan,
+             f"{us_seq / max(us_scan, 1e-9):.2f}x")
         emit(f"ligd.warm_iters.{model}", us_w, warm.total_iters)
         emit(f"ligd.cold_iters.{model}", us_c, cold.total_iters)
         emit(f"ligd.iter_speedup.{model}", 0.0,

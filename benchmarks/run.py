@@ -17,6 +17,7 @@ MODULES = [
     ("fig12_13", "benchmarks.fig12_13_vs_baselines"),
     ("fig14_19", "benchmarks.fig14_19_network"),
     ("ligd", "benchmarks.ligd_convergence"),
+    ("batched", "benchmarks.batched_solver"),
     ("eraplus", "benchmarks.era_plus"),
     ("kernels", "benchmarks.kernel_bench"),
     ("multipod", "benchmarks.multipod_scaling"),

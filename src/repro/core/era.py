@@ -117,7 +117,11 @@ class Terms(NamedTuple):
 def utility(scn, prof, s, alloc, q_thresh, w: Weights) -> Terms:
     """Γ = ω_T ΣT + ω_Q (C + z) + ω_R (ΣE + Σλ(r))   (eqs. 24–27).
 
-    q_thresh: (U,) per-user QoE latency thresholds Q_i (seconds)."""
+    q_thresh: (U,) per-user QoE latency thresholds Q_i (seconds).
+
+    Batch-safe: the Σ reductions run over the per-cell user axis of
+    unbatched (U,)/(U,M) operands, so under ``vmap`` (ligd.solve_batch)
+    each cell's Γ stays independent — nothing sums across cells."""
     t_dev, t_srv, t_up, t_dn, r_up, r_dn = delay_terms(scn, prof, s, alloc)
     t = t_dev + t_srv + t_up + t_dn
     e = energy(scn, prof, s, alloc, r_up, r_dn)
@@ -148,7 +152,11 @@ def clip_alloc(scn, alloc: Allocation) -> Allocation:
 
 def round_beta(scn, alloc: Allocation, cap=None) -> Allocation:
     """Discretise β to one-hot (paper Table I line 19), honouring the
-    ≤ max_users_per_channel cap per (AP, channel) greedily."""
+    ≤ max_users_per_channel cap per (AP, channel) greedily.
+
+    Host-side (NumPy) by design — the greedy cap is sequential.  In the
+    batched solver this runs once per cell AFTER the vmapped GD sweep, so
+    it stays off the compiled hot path."""
     cfg = scn.cfg
     cap = cfg.max_users_per_channel if cap is None else cap
 

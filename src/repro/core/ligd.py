@@ -19,6 +19,28 @@ size λ applied in normalised coordinates), projection = box clip + β row
 renormalisation.  Stops when ‖g‖<ε, |ΔΓ|<ε, or k = max_steps (Table I
 lines 6/9).
 
+Compiled sweep (this module's batched API): the warm-start predecessor
+graph depends only on the *static* ``uplink_bits`` profile, never on GD
+iterates, so ``warm_start_predecessors`` precomputes the visit order
+host-side and the whole F+1 sweep runs as ONE ``jax.lax.scan`` over a
+stacked ``Allocation`` buffer (``_sweep_scan``) — no per-layer dispatch, no
+host sync between layers.  ``solve(compiled_sweep=False)`` keeps the
+original per-layer Python loop as the reference implementation.
+``solve_batch`` vmaps the scanned sweep over a leading scenario axis so one
+compiled call schedules B independent cells.
+
+Static vs traced argument split (applies to ``_sweep_scan`` and everything
+above it):
+  static  — ``max_steps``, ``Weights`` (hashable frozen dataclass),
+            ``adaptive``, the scenario's ``NetworkConfig`` (pytree aux) and
+            the profile's layer count F (leaf shapes).  Changing any of
+            these recompiles.
+  traced  — channel state (``Scenario`` leaves), profile FLOP/bit tables
+            (``SplitProfile`` leaves, incl. ``input_bits``/``result_bits``),
+            QoE thresholds ``q``, ``lr``/``tol``, the warm-start predecessor
+            index vector, and the initial allocation.  These can change
+            every admission round without recompiling.
+
 Beyond-paper extension (``per_user_split=True``, "ERA+"): the paper commits
 one global s*; ERA+ reuses the F+1 solved GD problems to pick per-user
 s_i = argmin_s of user i's utility contribution, then re-polishes the
@@ -27,13 +49,13 @@ allocation with the mixed split vector.  Recorded separately in benchmarks.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import noma
+from repro.core import network, noma, profiles
 from repro.core.era import (Allocation, Terms, Weights, clip_alloc,
                             round_beta, uniform_alloc, utility)
 
@@ -63,12 +85,10 @@ def _scales(cfg):
     )
 
 
-@partial(jax.jit, static_argnames=("max_steps", "w", "adaptive"))
-def _gd_solve(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-              adaptive=False):
-    """Projected, preconditioned GD on Γ. Scenario/SplitProfile are
-    registered pytrees, Weights is static, so one compilation serves every
-    layer's solve.
+def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
+             adaptive=False):
+    """Projected, preconditioned GD on Γ — pure traced function, shared by
+    the per-layer jitted path and the scan-compiled sweep.
 
     ``adaptive=True`` (beyond paper — the paper's §III closing remark
     suggests self-adaptive step sizes): backtracking multiplicative step
@@ -86,7 +106,7 @@ def _gd_solve(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
         return (~done) & (k < max_steps)
 
     def body(carry):
-        alloc, g_prev, k, _, cur_lr = carry
+        alloc, prev_val, k, _, cur_lr = carry
         val, g = grad_fn(alloc)
         # guard against inf gradients from degenerate (near-zero-rate)
         # allocations: 1/R² terms in eq. (34) blow up as R -> 0
@@ -97,24 +117,108 @@ def _gd_solve(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
             lambda gg, sc: cur_lr * sc * gg / (gnorm + 1e-12), g, scales)
         new = clip_alloc(scn, Allocation(*[a - d for a, d in
                                            zip(alloc, step)]))
-        new_val = loss(new)
         if adaptive:
+            # backtracking needs Γ at the candidate point — pay the extra
+            # forward pass only on this path
+            new_val = loss(new)
             improved = new_val < val
             new = jax.tree.map(
                 lambda n, o: jnp.where(improved, n, o), new, alloc)
             new_val = jnp.where(improved, new_val, val)
             cur_lr = jnp.where(improved, cur_lr * 1.1, cur_lr * 0.5)
-        done = (jnp.abs(new_val - val) < tol * (1.0 + jnp.abs(val))) \
+            done = (jnp.abs(new_val - val) < tol * (1.0 + jnp.abs(val))) \
+                | (gnorm < tol) | (cur_lr < lr * 1e-3)
+            return (new, new_val, k + 1, done, cur_lr)
+        # plain GD: value_and_grad already gives Γ(x_k), so the |ΔΓ| stop
+        # compares against the previous iterate's value instead of paying a
+        # third Γ evaluation per step (one extra lagged iteration at most)
+        done = (jnp.abs(val - prev_val) < tol * (1.0 + jnp.abs(val))) \
             | (gnorm < tol)
-        if adaptive:
-            done = done | (cur_lr < lr * 1e-3)
-        return (new, new_val, k + 1, done, cur_lr)
+        return (new, val, k + 1, done, cur_lr)
 
-    init_val = loss(x0)
+    init_val = jnp.float32(jnp.inf) if not adaptive else loss(x0)
     alloc, gamma, iters, _, _ = jax.lax.while_loop(
         cond, body, (x0, init_val, jnp.int32(0), jnp.bool_(False),
                      jnp.float32(lr)))
     return GDResult(alloc, loss(alloc), iters)
+
+
+# per-layer entry point (sequential reference path + ERA+ polish step):
+# Scenario/SplitProfile are registered pytrees, Weights is static, so one
+# compilation serves every layer's solve.
+_gd_solve = partial(jax.jit, static_argnames=("max_steps", "w",
+                                              "adaptive"))(_gd_core)
+
+
+def warm_start_predecessors(uplink_bits, warm_start: bool = True
+                            ) -> np.ndarray:
+    """Host-side precompute of Table I's nearest-w warm-start rule.
+
+    Returns ``pred`` (F+1,) int32 such that the GD for split point s starts
+    from the solved allocation of split ``pred[s]`` — the already-visited
+    split whose intermediate data size is nearest ``w_s`` (first index wins
+    ties, matching the sequential reference).  The solution buffer is
+    initialised with the uninformed start, so ``pred[s] == s`` (slot not yet
+    written) means "start cold"; that encodes both s = 0 and the
+    ``warm_start=False`` baseline without any branching in the scan body.
+    """
+    wbits = np.asarray(uplink_bits)
+    n = wbits.shape[0]
+    pred = np.arange(n, dtype=np.int32)
+    if warm_start:
+        for s in range(1, n):
+            pred[s] = np.argmin(np.abs(wbits[s] - wbits[:s]))
+    return pred
+
+
+def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
+                adaptive=False):
+    """The whole F+1 split sweep as one ``lax.scan`` (tentpole path).
+
+    Carry = a stacked Allocation buffer with leading axis F+1, initialised
+    to ``x_init`` in every slot; step s reads slot ``pred[s]`` (dynamic
+    gather — always an already-written slot or the uninformed start, see
+    ``warm_start_predecessors``), runs GD, and writes slot s.  F is static
+    (``pred``'s shape), so XLA sees a single fused program with no host
+    round-trips between layers."""
+    n_s = pred.shape[0]                    # F+1 (static)
+    u = q.shape[0]
+    buf0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_s,) + x.shape), x_init)
+
+    def body(buf, xs):
+        s, p_idx = xs
+        x0 = jax.tree.map(lambda b: b[p_idx], buf)
+        s_vec = jnp.full((u,), s, jnp.int32)
+        res = _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
+                       adaptive=adaptive)
+        buf = jax.tree.map(lambda b, a: b.at[s].set(a), buf, res.alloc)
+        return buf, res
+
+    _, swept = jax.lax.scan(body, buf0,
+                            (jnp.arange(n_s, dtype=jnp.int32), pred))
+    return swept                           # GDResult stacked along s
+
+
+_sweep_scan = partial(jax.jit, static_argnames=("max_steps", "w",
+                                                "adaptive"))(_sweep_core)
+
+
+@partial(jax.jit, static_argnames=("max_steps", "w", "adaptive",
+                                   "prof_batched"))
+def _sweep_batch(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
+                 adaptive=False, prof_batched=False):
+    """vmap of the scanned sweep over a leading cell axis B.
+
+    ``scn_b``/``q_b``/``pred_b`` carry the batch axis; the initial
+    allocation is shared (it depends only on the NetworkConfig box bounds);
+    ``prof`` is batched only when cells serve different split profiles."""
+    return jax.vmap(
+        lambda scn, q, pred, prf: _sweep_core(
+            scn, q, x_init, pred, lr, tol, max_steps, w, prf,
+            adaptive=adaptive),
+        in_axes=(0, 0, 0, 0 if prof_batched else None),
+    )(scn_b, q_b, pred_b, prof)
 
 
 def _per_user_cost(scn, prof, s_vec, alloc, q, w: Weights):
@@ -142,38 +246,149 @@ def soften_beta(scn, alloc: Allocation, eps: float = 0.1) -> Allocation:
                           beta_dn=mix(alloc.beta_dn))
 
 
+def _cost_table(scn, prof, stacked, q, w):
+    """(F+1, U) table of each user's Γ summand at every solved split — one
+    vmapped dispatch instead of the seed's F+1 eager evaluations."""
+    n_s = stacked.p.shape[0]
+    u = q.shape[0]
+    return jax.vmap(
+        lambda s, a: _per_user_cost(
+            scn, prof, jnp.full((u,), s, jnp.int32), a, q, w)
+    )(jnp.arange(n_s, dtype=jnp.int32), stacked)
+
+
+_per_user_cost_table = partial(jax.jit,
+                               static_argnames=("w",))(_cost_table)
+
+
+def _discretize(scn, prof, s_user, hard, q, w, f):
+    """SIC feasibility fallback + final Γ at the rounded allocation, as one
+    compiled call (the seed evaluated both eagerly, op by op)."""
+    feasible = noma.sic_feasible(scn, hard.beta_up, hard.p)
+    s_final = jnp.where(feasible, s_user, f)
+    return s_final, utility(scn, prof, s_final, hard, q, w)
+
+
+_discretize_eval = partial(jax.jit,
+                           static_argnames=("w", "f"))(_discretize)
+
+
+def _cells_in(prof_batched):
+    """in_axes for (scn, per-cell arrays..., prof) vmaps."""
+    return 0 if prof_batched else None
+
+
+@partial(jax.jit, static_argnames=("w", "prof_batched"))
+def _cost_table_batch(scn_b, q_b, stacked_b, w, prof, prof_batched=False):
+    return jax.vmap(
+        lambda scn, q, st, prf: _cost_table(scn, prf, st, q, w),
+        in_axes=(0, 0, 0, _cells_in(prof_batched)),
+    )(scn_b, q_b, stacked_b, prof)
+
+
+@partial(jax.jit, static_argnames=("w", "f", "prof_batched"))
+def _discretize_eval_batch(scn_b, s_user_b, hard_b, q_b, w, prof, f,
+                           prof_batched=False):
+    return jax.vmap(
+        lambda scn, s, h, q, prf: _discretize(scn, prf, s, h, q, w, f),
+        in_axes=(0, 0, 0, 0, _cells_in(prof_batched)),
+    )(scn_b, s_user_b, hard_b, q_b, prof)
+
+
+def _finalize(scn, prof, q, w, stacked, gammas_np, iters_np, *, lr, tol,
+              max_steps, adaptive, per_user_split) -> LiGDOutcome:
+    """Shared post-sweep discretisation: s* pick (+ optional ERA+ per-user
+    split & polish), β rounding, SIC fallback, final Γ evaluation.
+
+    ``stacked``: Allocation pytree with leading axis F+1 (slot s = the GD
+    solution for split point s)."""
+    u = scn.cfg.n_users
+    f = prof.n_layers
+    s_star = int(np.argmin(gammas_np))
+
+    def alloc_at(s):
+        return jax.tree.map(lambda b: b[s], stacked)
+
+    if per_user_split:
+        costs = _per_user_cost_table(scn, prof, stacked, q, w)   # (F+1, U)
+        s_user = jnp.argmin(costs, axis=0).astype(jnp.int32)
+        # polish the allocation for the mixed split vector
+        res = _gd_solve(scn, s_user, q, alloc_at(s_star), lr, tol,
+                        max_steps, w, prof, adaptive=adaptive)
+        alloc = res.alloc
+    else:
+        s_user = jnp.full((u,), s_star, jnp.int32)
+        alloc = alloc_at(s_star)
+
+    # discretise + SIC feasibility fallback (device-only s=F)
+    hard = round_beta(scn, alloc)
+    s_final, terms = _discretize_eval(scn, prof, s_user, hard, q, w, f)
+
+    return LiGDOutcome(
+        s=np.asarray(s_final),
+        alloc=hard,
+        terms=terms,
+        gamma_by_layer=gammas_np,
+        iters_by_layer=iters_np,
+        total_iters=int(np.sum(iters_np)),
+    )
+
+
 def solve(scn, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
           max_steps=400, warm_start=True, per_user_split=False,
           init_alloc: Allocation = None, adaptive=False,
-          key=None) -> LiGDOutcome:
+          key=None, compiled_sweep=True) -> LiGDOutcome:
     """Run Li-GD (warm_start=True) or the paper's cold-start GD baseline
     (warm_start=False) over every candidate split point.
+
+    ``compiled_sweep=True`` (default) runs the F+1 sweep as one scanned
+    program (see module docstring); ``False`` keeps the per-layer Python
+    loop — one jitted solve per split with a host sync in between — as the
+    reference implementation the compiled path is tested against.
 
     ``init_alloc`` (beyond paper, "online ERA"): seed layer 1's GD from a
     previous time step's solution instead of the uninformed start — the
     loop-iteration warm-start idea extended across time, for re-scheduling
     under channel drift (network.evolve_scenario)."""
-    cfg = scn.cfg
-    u = cfg.n_users
+    x_init = (soften_beta(scn, init_alloc) if init_alloc is not None
+              else uniform_alloc(scn, rng=key))
+
+    if not compiled_sweep:
+        return _solve_sequential(scn, prof, q, w, lr=lr, tol=tol,
+                                 max_steps=max_steps, warm_start=warm_start,
+                                 per_user_split=per_user_split,
+                                 adaptive=adaptive, x_init=x_init)
+
+    pred = warm_start_predecessors(prof.uplink_bits, warm_start)
+    swept = _sweep_scan(scn, q, x_init, jnp.asarray(pred), lr, tol,
+                        max_steps, w, prof, adaptive=adaptive)
+    return _finalize(scn, prof, q, w, swept.alloc,
+                     np.asarray(swept.gamma), np.asarray(swept.iters),
+                     lr=lr, tol=tol, max_steps=max_steps, adaptive=adaptive,
+                     per_user_split=per_user_split)
+
+
+def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
+                      per_user_split, adaptive, x_init) -> LiGDOutcome:
+    """The seed-structured reference the compiled sweep is validated and
+    benchmarked against: one jitted GD per layer with a NumPy round-trip in
+    between, an eager per-user cost stack for ERA+, and eager
+    discretisation.  (The GD step itself is the shared ``_gd_core``, whose
+    non-adaptive stop check was restructured in the same PR — so this path
+    preserves the seed's dispatch/sync *structure*, not its bit-exact
+    iterates.)"""
+    u = scn.cfg.n_users
     f = prof.n_layers
-    wbits = np.asarray(prof.uplink_bits)          # (F+1,)
+    pred = warm_start_predecessors(prof.uplink_bits, warm_start)
 
     solved_alloc, gammas, iters = [], [], []
-    x_uniform = (soften_beta(scn, init_alloc) if init_alloc is not None
-                 else uniform_alloc(scn, rng=key))
-
     for s in range(f + 1):
-        if warm_start and solved_alloc:
-            j = int(np.argmin([abs(wbits[s] - wbits[jj])
-                               for jj in range(len(solved_alloc))]))
-            x0 = solved_alloc[j]
-        else:
-            x0 = x_uniform
+        x0 = solved_alloc[pred[s]] if pred[s] < s else x_init
         s_vec = jnp.full((u,), s, jnp.int32)
         res = _gd_solve(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
                         adaptive=adaptive)
         solved_alloc.append(res.alloc)
-        gammas.append(float(res.gamma))
+        gammas.append(float(res.gamma))      # host sync per layer
         iters.append(int(res.iters))
 
     gammas_np = np.asarray(gammas)
@@ -185,7 +400,7 @@ def solve(scn, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
                                       jnp.full((u,), s, jnp.int32),
                                       solved_alloc[s], q, w))
             for s in range(f + 1)
-        ])                                         # (F+1, U)
+        ])                                   # (F+1, U) — eager, per layer
         s_user = jnp.asarray(np.argmin(costs, axis=0), jnp.int32)
         # polish the allocation for the mixed split vector
         res = _gd_solve(scn, s_user, q, solved_alloc[s_star], lr, tol,
@@ -209,3 +424,138 @@ def solve(scn, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
         iters_by_layer=np.asarray(iters),
         total_iters=int(np.sum(iters)),
     )
+
+
+class BatchPrep(NamedTuple):
+    """Round-invariant inputs of ``solve_batch`` (stacked scenarios,
+    stacked/per-cell profiles, warm-start predecessor matrix).  Build once
+    via ``prepare_batch`` when solving the same cells every admission round
+    (MultiCellScheduler does) instead of re-deriving them per call."""
+    scn_b: object                 # batched Scenario (leading cell axis)
+    scn_list: tuple               # per-cell Scenarios
+    prof_b: object                # shared or stacked SplitProfile
+    prof_list: tuple              # per-cell SplitProfiles
+    prof_batched: bool
+    pred_b: np.ndarray            # (B, F+1) warm-start predecessors
+
+
+def prepare_batch(scns, prof, warm_start: bool = True) -> BatchPrep:
+    """Precompute everything about (cells, profiles) that does not change
+    between solves.  ``scns``: list of Scenarios or an already-stacked
+    batched Scenario; ``prof``: shared profile or per-cell list."""
+    if isinstance(scns, (list, tuple)):
+        scn_list = tuple(scns)
+        scn_b = network.stack_scenarios(scn_list)
+    else:
+        scn_b = scns
+        scn_list = tuple(jax.tree.map(lambda x, b=b: x[b], scn_b)
+                         for b in range(scn_b.assoc.shape[0]))
+    n_cells = len(scn_list)
+
+    if isinstance(prof, (list, tuple)):
+        prof_list = tuple(prof)
+        if len(prof_list) != n_cells:
+            raise ValueError("need one profile per cell")
+        prof_b = profiles.stack_profiles(prof_list)
+        prof_batched = True
+    else:
+        prof_list = (prof,) * n_cells
+        prof_b = prof
+        prof_batched = False
+
+    pred_b = np.stack([warm_start_predecessors(p.uplink_bits, warm_start)
+                       for p in prof_list])
+    return BatchPrep(scn_b, scn_list, prof_b, prof_list, prof_batched,
+                     pred_b)
+
+
+def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
+                max_steps=400, warm_start=True, per_user_split=False,
+                adaptive=False, prep: BatchPrep = None) -> List[LiGDOutcome]:
+    """Schedule B independent cells with ONE compiled, vmapped sweep.
+
+    Arguments:
+      scns: a list/tuple of ``Scenario``s sharing one NetworkConfig, or an
+        already-stacked batched Scenario (``network.stack_scenarios``).
+      prof: one shared ``SplitProfile``, or a list of per-cell profiles
+        with equal layer counts (``profiles.stack_profiles`` semantics —
+        e.g. the same architecture profiled at different request lengths).
+      q: (B, U) per-cell QoE thresholds.
+
+    The GD sweep for all B cells runs in a single ``_sweep_batch`` call;
+    only the cheap discretisation (β rounding, SIC fallback) happens
+    per-cell on the host.  Returns one ``LiGDOutcome`` per cell.
+
+    ``prep``: pass a ``prepare_batch`` result to skip re-deriving the
+    round-invariant stacked inputs on every call (``scns``/``prof``/
+    ``warm_start`` are then ignored in its favour).
+    """
+    if prep is None:
+        prep = prepare_batch(scns, prof, warm_start)
+    scn_b, scn_list = prep.scn_b, prep.scn_list
+    prof_b, prof_list = prep.prof_b, prep.prof_list
+    prof_batched, pred_b = prep.prof_batched, prep.pred_b
+    n_cells = len(scn_list)
+    q = jnp.asarray(q)
+    if q.ndim != 2 or q.shape[0] != n_cells:
+        raise ValueError(f"q must be (B, U) with B={n_cells}, got {q.shape}")
+
+    x_init = uniform_alloc(scn_list[0])    # cfg-only; identical across cells
+    f = prof_list[0].n_layers
+    u = q.shape[1]
+
+    swept = _sweep_batch(scn_b, q, x_init, jnp.asarray(pred_b), lr, tol,
+                         max_steps, w, prof_b, adaptive=adaptive,
+                         prof_batched=prof_batched)
+
+    # ---- batched finalize: every compiled stage is ONE dispatch for all
+    # cells; only the greedy β rounding runs per cell (host-side) ----------
+    gammas = np.asarray(swept.gamma)                       # (B, F+1)
+    iters = np.asarray(swept.iters)
+    s_star = jnp.asarray(np.argmin(gammas, axis=1), jnp.int32)   # (B,)
+    cell_ix = jnp.arange(n_cells)
+
+    def at_star(x):
+        return x[cell_ix, s_star]
+
+    if per_user_split:
+        costs = _cost_table_batch(scn_b, q, swept.alloc, w, prof_b,
+                                  prof_batched=prof_batched)  # (B, F+1, U)
+        s_user = jnp.argmin(costs, axis=1).astype(jnp.int32)  # (B, U)
+        # polish per cell: polish iteration counts vary wildly across
+        # cells, so a vmapped (lockstep) polish would run every lane to the
+        # slowest cell's count — B small dispatches are cheaper here
+        x_star = jax.tree.map(at_star, swept.alloc)
+        polished = [
+            _gd_solve(scn_list[b], s_user[b], q[b],
+                      jax.tree.map(lambda x, b=b: x[b], x_star),
+                      lr, tol, max_steps, w, prof_list[b], adaptive=adaptive)
+            for b in range(n_cells)
+        ]
+        alloc_b = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[p.alloc for p in polished])
+    else:
+        s_user = jnp.broadcast_to(s_star[:, None], (n_cells, u))
+        alloc_b = jax.tree.map(at_star, swept.alloc)
+
+    # discretise per cell (host greedy), then one batched SIC+Γ evaluation
+    hard_list = [round_beta(scn_list[b],
+                            jax.tree.map(lambda x, b=b: x[b], alloc_b))
+                 for b in range(n_cells)]
+    hard_b = jax.tree.map(lambda *xs: jnp.stack(xs), *hard_list)
+    s_final_b, terms_b = _discretize_eval_batch(
+        scn_b, s_user, hard_b, q, w, prof_b, f, prof_batched=prof_batched)
+
+    s_final_np = np.asarray(s_final_b)
+    terms_np = jax.tree.map(np.asarray, terms_b)
+    return [
+        LiGDOutcome(
+            s=s_final_np[b],
+            alloc=hard_list[b],
+            terms=Terms(*(leaf[b] for leaf in terms_np)),
+            gamma_by_layer=gammas[b],
+            iters_by_layer=iters[b],
+            total_iters=int(iters[b].sum()),
+        )
+        for b in range(n_cells)
+    ]

@@ -105,6 +105,26 @@ def _scn_unflatten(cfg, children):
 jax.tree_util.register_pytree_node(Scenario, _scn_flatten, _scn_unflatten)
 
 
+def stack_scenarios(scns) -> Scenario:
+    """Stack same-config scenarios into one batched Scenario whose array
+    fields carry a leading cell axis B — the input shape of
+    ``ligd.solve_batch`` / any vmapped solver.  The shared ``NetworkConfig``
+    stays pytree aux data (static), so one compilation serves every batch
+    of cells with these dimensions.
+
+    Note the batched object is a *container*, not a semantic Scenario:
+    methods like ``own_gain_up`` assume unbatched fields and are only valid
+    per-cell (i.e. under ``vmap``, which strips the leading axis)."""
+    scns = list(scns)
+    if not scns:
+        raise ValueError("need at least one scenario")
+    for s in scns[1:]:
+        if s.cfg != scns[0].cfg:
+            raise ValueError("stack_scenarios needs a shared NetworkConfig; "
+                             f"got {s.cfg} vs {scns[0].cfg}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *scns)
+
+
 def _orderings(own_gain: np.ndarray, assoc: np.ndarray, descending: bool):
     """Per-subchannel sort grouped by AP, plus end-of-group pointers."""
     u, m = own_gain.shape

@@ -16,6 +16,13 @@ The sorted-cumsum trick: SIC orderings depend only on channel gains, which
 are static per scenario, so ``Scenario`` precomputes per-channel user
 orderings grouped by AP; interference is then an (exclusive) suffix sum over
 the sorted contributions — O(U·M), no U×U pairwise tensor.
+
+Batch-safety audit (ligd.solve_batch vmaps this module over a leading cell
+axis): every reduction here is over an explicit named axis (cumsum axis=1,
+rate sum axis=1, einsum subscripts, segment_sum over the per-cell ``assoc``)
+and every gather/scatter indexes with per-cell static orderings, so vmap
+lifts all of it cleanly — there are no full-array reductions that would
+leak across cells.
 """
 from __future__ import annotations
 

@@ -24,6 +24,11 @@ import numpy as np
 
 @dataclass(frozen=True)
 class SplitProfile:
+    """Batch-friendly pytree: all four numeric fields are children (the
+    endpoint sizes as 0-d arrays), so same-name profiles stack along a
+    leading cell axis (``stack_profiles``) and vmap strips it back off.
+    The split-indexed table properties below assume *unbatched* fields —
+    on a stacked profile use them per-cell (i.e. under vmap only)."""
     name: str
     layer_flops: jnp.ndarray     # (F,) FLOPs of layer i (1-indexed at i-1)
     out_bits: jnp.ndarray        # (F,) bits leaving layer i
@@ -32,10 +37,10 @@ class SplitProfile:
 
     @property
     def n_layers(self) -> int:
-        return int(self.layer_flops.shape[0])
+        return int(self.layer_flops.shape[-1])
 
     def __hash__(self):  # pytree aux-compatible identity
-        return hash((self.name, int(self.layer_flops.shape[0])))
+        return hash((self.name, int(self.layer_flops.shape[-1])))
 
     # ---- split-indexed tables (length F+1, index = s) ----
     @property
@@ -49,7 +54,8 @@ class SplitProfile:
 
     @property
     def uplink_bits(self):
-        w = jnp.concatenate([jnp.asarray([self.input_bits]), self.out_bits])
+        head = jnp.reshape(jnp.asarray(self.input_bits, jnp.float32), (1,))
+        w = jnp.concatenate([head, self.out_bits])
         return w.at[-1].set(0.0)  # device-only: nothing uplinked
 
     @property
@@ -60,15 +66,39 @@ class SplitProfile:
 
 
 def _prof_flatten(p):
-    return ((p.layer_flops, p.out_bits),
-            (p.name, p.input_bits, p.result_bits))
+    # NOTE: flatten must pass leaves through untouched (jax feeds sentinel
+    # objects through pytrees during vmap axis resolution) — the endpoint
+    # sizes stay plain floats until stack_profiles arrays them.
+    return ((p.layer_flops, p.out_bits, p.input_bits, p.result_bits),
+            (p.name,))
 
 
 def _prof_unflatten(aux, children):
-    return SplitProfile(aux[0], children[0], children[1], aux[1], aux[2])
+    return SplitProfile(aux[0], *children)
 
 
 jax.tree_util.register_pytree_node(SplitProfile, _prof_flatten, _prof_unflatten)
+
+
+def stack_profiles(profs) -> SplitProfile:
+    """Stack per-cell profiles (equal layer count F) into one batched
+    SplitProfile with a leading cell axis on every numeric field — the
+    per-cell-profile input of ``ligd.solve_batch``.  Typical use: one
+    architecture profiled at different per-cell request lengths."""
+    profs = list(profs)
+    fs = {p.n_layers for p in profs}
+    if len(fs) != 1:
+        raise ValueError(f"profiles must share a layer count, got {fs}")
+    name = profs[0].name if len({p.name for p in profs}) == 1 \
+        else "batch(" + ",".join(p.name for p in profs) + ")"
+    as_scalar = lambda v: jnp.asarray(v, jnp.float32)
+    return SplitProfile(
+        name=name,
+        layer_flops=jnp.stack([p.layer_flops for p in profs]),
+        out_bits=jnp.stack([p.out_bits for p in profs]),
+        input_bits=jnp.stack([as_scalar(p.input_bits) for p in profs]),
+        result_bits=jnp.stack([as_scalar(p.result_bits) for p in profs]),
+    )
 
 
 # --------------------------------------------------------------------------- #

@@ -30,6 +30,10 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# an operand inside op(...): optional "dtype[dims]{layout} " prefix before
+# the %name — scheduled HLO dumps print operands fully typed; the layout
+# braces may carry tiling/memory-space annotations, e.g. {1,0:T(8,128)}
+_OPERAND = r"(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?\s+)?%?([\w\.\-]+)"
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
 _COMP_HDR_RE = re.compile(
     r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s*->\s*(.+?)\s*\{")
@@ -142,11 +146,14 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
         if not dm:
             continue
         rhs = dm.group(2)
-        om = _OPCODE_RE.search(rhs)
+        # strip layout braces before locating the opcode: tiled TPU
+        # layouts like {1,0:T(8,128)} would otherwise match `T(` first
+        clean = re.sub(r"\{[^}]*\}", "", rhs)
+        om = _OPCODE_RE.search(clean)
         if not om:
             continue
         opcode = om.group(1)
-        el, by = _parse_shape(rhs[: om.start()])
+        el, by = _parse_shape(clean[: om.start()])
         called = []
         for key in _CALLS:
             for cm in re.finditer(re.escape(key) + r"%?([\w\.\-]+)", rhs):
@@ -157,7 +164,7 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
 
 def _dot_flops(op: OpLine, shapes: Dict[str, Tuple[str, List[int]]]) -> float:
     """2 · prod(out dims) · prod(lhs contracting dims)."""
-    m = re.search(r"(dot|convolution)\((%?[\w\.\-]+),\s*(%?[\w\.\-]+)",
+    m = re.search(r"(dot|convolution)\(" + _OPERAND + r",\s*" + _OPERAND,
                   op.line)
     if not m:
         return 0.0
@@ -197,7 +204,8 @@ def _trip_count(cond: Computation) -> int:
             consts[op.name] = int(mm.group(1))
     for op in cond.ops:
         if op.opcode == "compare" and "direction=LT" in op.line:
-            am = re.search(r"compare\((%?[\w\.\-]+),\s*(%?[\w\.\-]+)", op.line)
+            am = re.search(r"compare\(" + _OPERAND + r",\s*" + _OPERAND,
+                           op.line)
             if am:
                 c = consts.get(am.group(2).lstrip("%"))
                 if c is not None and c > 0:

@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tiny \
       --users 12 --seq-len 32 --decode-steps 8
+
+Multi-cell mode (one batched Li-GD solve schedules every cell):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tiny \
+      --users 12 --cells 4
 """
 from __future__ import annotations
 
@@ -10,11 +15,24 @@ import argparse
 import numpy as np
 
 
+def _summarise(tag, results, q):
+    lat = np.array([r.latency_s for r in results])
+    print(f"{tag}served {len(results)} users | mean latency "
+          f"{lat.mean()*1e3:.1f} ms | p95 {np.percentile(lat,95)*1e3:.1f} ms"
+          f" | QoE violations {(lat > q).sum()}/{len(results)}")
+    for r in results[:4]:
+        print(f"{tag}  user {r.user}: dev {r.t_device*1e3:.2f}ms + up "
+              f"{r.t_uplink*1e3:.2f}ms + edge {r.t_edge*1e3:.2f}ms + dn "
+              f"{r.t_downlink*1e3:.2f}ms -> tokens {r.tokens_out[:6]}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--users", type=int, default=12)
+    ap.add_argument("--cells", type=int, default=1,
+                    help=">1 schedules all cells with one batched solve")
     ap.add_argument("--subchannels", type=int, default=6)
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=8)
@@ -29,8 +47,8 @@ def main():
     from repro.configs import get_config, get_tiny_config
     from repro.core import network, profiles
     from repro.models import transformer as T
-    from repro.serving.engine import SplitServeEngine
-    from repro.serving.scheduler import EraScheduler
+    from repro.serving.engine import MultiCellServeEngine, SplitServeEngine
+    from repro.serving.scheduler import EraScheduler, MultiCellScheduler
 
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
@@ -38,33 +56,42 @@ def main():
 
     ncfg = network.small_config(n_users=args.users,
                                 n_subchannels=args.subchannels)
-    scn = network.make_scenario(jax.random.fold_in(key, 1), ncfg)
     prof = profiles.transformer_profile(cfg, seq=args.seq_len)
-    sched = EraScheduler(scn, prof,
-                         per_user_split=not args.no_per_user_split,
-                         max_steps=120)
-    engine = SplitServeEngine(params, cfg, scn, prof, sched)
+    per_user = not args.no_per_user_split
 
-    if cfg.n_codebooks > 1:
-        toks = jax.random.randint(jax.random.fold_in(key, 2),
-                                  (args.users, cfg.n_codebooks, args.seq_len),
-                                  0, cfg.vocab_size)
-    else:
-        toks = jax.random.randint(jax.random.fold_in(key, 2),
-                                  (args.users, args.seq_len), 0,
-                                  cfg.vocab_size)
+    def make_tokens(k, n):
+        if cfg.n_codebooks > 1:
+            return jax.random.randint(
+                k, (n, cfg.n_codebooks, args.seq_len), 0, cfg.vocab_size)
+        return jax.random.randint(k, (n, args.seq_len), 0, cfg.vocab_size)
+
     q = np.full(args.users, args.qoe_ms / 1e3)
+
+    if args.cells > 1:
+        # scenario keys folded at 100+ so they never collide with the
+        # token key (fold_in(key, 2)) for any cell count
+        scns = [network.make_scenario(jax.random.fold_in(key, 100 + b), ncfg)
+                for b in range(args.cells)]
+        sched = MultiCellScheduler(scns, prof, per_user_split=per_user,
+                                   max_steps=120)
+        engine = MultiCellServeEngine(params, cfg, scns, sched)
+        toks = np.asarray(make_tokens(jax.random.fold_in(key, 2),
+                                      args.cells * args.users))
+        toks = toks.reshape((args.cells, args.users) + toks.shape[1:])
+        qs = np.tile(q, (args.cells, 1))
+        rounds = engine.serve_round(toks, qs,
+                                    decode_steps=args.decode_steps)
+        for b, results in enumerate(rounds):
+            _summarise(f"[cell {b}] ", results, q)
+        return 0
+
+    scn = network.make_scenario(jax.random.fold_in(key, 1), ncfg)
+    sched = EraScheduler(scn, prof, per_user_split=per_user, max_steps=120)
+    engine = SplitServeEngine(params, cfg, scn, prof, sched)
+    toks = make_tokens(jax.random.fold_in(key, 2), args.users)
     results = engine.serve_round(np.asarray(toks), q,
                                  decode_steps=args.decode_steps)
-
-    lat = np.array([r.latency_s for r in results])
-    print(f"served {len(results)} users | mean latency "
-          f"{lat.mean()*1e3:.1f} ms | p95 {np.percentile(lat,95)*1e3:.1f} ms"
-          f" | QoE violations {(lat > q).sum()}/{len(results)}")
-    for r in results[:4]:
-        print(f"  user {r.user}: dev {r.t_device*1e3:.2f}ms + up "
-              f"{r.t_uplink*1e3:.2f}ms + edge {r.t_edge*1e3:.2f}ms + dn "
-              f"{r.t_downlink*1e3:.2f}ms -> tokens {r.tokens_out[:6]}")
+    _summarise("", results, q)
     return 0
 
 

@@ -1,7 +1,7 @@
 """Split-serving engine: executes scheduled requests end to end.
 
 Pipeline per admission round:
-  1. EraScheduler -> per-user (split, channel, power, r) assignments
+  1. scheduler -> per-user (split, channel, power, r) assignments
   2. users are grouped by split point; each group's device-side prefix runs
      per user (their own tokens), the crossing activations are "transmitted"
      over the simulated NOMA link (latency = bits / scheduled rate), and the
@@ -11,6 +11,10 @@ Pipeline per admission round:
 The radio and edge-compute times are simulated (CPU container — DESIGN.md);
 the numerical path (device prefix -> crossing tensor -> edge suffix) is the
 real model, so tests can assert split == fused logits exactly.
+
+``SplitServeEngine`` serves one cell; ``MultiCellServeEngine`` serves B
+cells whose schedules come from ONE batched solve (MultiCellScheduler) and
+then reuses the same per-cell execution path (``execute_schedule``).
 """
 from __future__ import annotations
 
@@ -24,7 +28,8 @@ import numpy as np
 from repro.core.era import lam
 from repro.models import transformer as T
 from repro.serving import split_runtime
-from repro.serving.scheduler import EraScheduler, Schedule
+from repro.serving.scheduler import (EraScheduler, MultiCellScheduler,
+                                     Schedule)
 
 
 @dataclass
@@ -38,6 +43,65 @@ class RequestResult:
     t_downlink: float
 
 
+def execute_schedule(params, cfg, netcfg, prof, sched: Schedule,
+                     tokens_per_user, *, decode_steps=0
+                     ) -> List[RequestResult]:
+    """Run one cell's scheduled admission round (steps 2–3 above)."""
+    results: Dict[int, RequestResult] = {}
+
+    for split, users in sched.groups().items():
+        toks = tokens_per_user[users]
+        x, positions = split_runtime.device_forward(params, cfg, toks, split)
+        crossing_bits = (float(x[0].size) * x.dtype.itemsize * 8)
+
+        logits = split_runtime.edge_forward(params, cfg, x, positions, split)
+        next_tok = np.asarray(jnp.argmax(logits[:, -1], -1))
+
+        dev_fl = float(prof.device_flops[split])
+        edge_fl = float(prof.edge_flops[split])
+        for row, u in enumerate(users):
+            r_up = max(float(sched.uplink_rate[u]), 1.0)
+            r_dn = max(float(sched.downlink_rate[u]), 1.0)
+            t_dev = dev_fl / netcfg.c_device_flops
+            t_up = (crossing_bits / r_up) if split < prof.n_layers \
+                else 0.0
+            eff = lam(float(sched.compute_units[u]), netcfg) \
+                * netcfg.c_min_flops
+            t_edge = edge_fl / eff
+            t_dn = (float(prof.result_bits) / r_dn) \
+                if split < prof.n_layers else 0.0
+            results[int(u)] = RequestResult(
+                user=int(u),
+                tokens_out=next_tok[row:row + 1],
+                latency_s=t_dev + t_up + t_edge + t_dn,
+                t_device=t_dev, t_uplink=t_up,
+                t_edge=t_edge, t_downlink=t_dn,
+            )
+
+    if decode_steps:
+        _continue_decode(params, cfg, tokens_per_user, results, decode_steps)
+    return [results[u] for u in sorted(results)]
+
+
+def _continue_decode(params, cfg, tokens, results, n_steps):
+    """Greedy decode continuation on the edge (full model, cached)."""
+    # sequence length is the LAST axis — multi-codebook models carry
+    # (U, n_codebooks, S) tokens, where shape[1] would be n_codebooks
+    s = tokens.shape[-1]
+    logits, caches, _ = T.prefill(params, cfg, tokens,
+                                  max_seq=s + n_steps + 1)
+    cur = jnp.argmax(logits[:, -1], -1)
+    outs = [np.asarray(cur)]
+    for step in range(n_steps - 1):
+        logits, caches = T.decode_step(params, cfg, cur,
+                                       jnp.int32(s + step), caches)
+        cur = jnp.argmax(logits, -1)
+        outs.append(np.asarray(cur))
+    seq = np.stack(outs, 1)
+    for u, r in results.items():
+        r.tokens_out = seq[u]
+
+
 class SplitServeEngine:
     def __init__(self, params, cfg, scn, prof, scheduler: EraScheduler):
         self.params = params
@@ -49,60 +113,33 @@ class SplitServeEngine:
     def serve_round(self, tokens_per_user, q_thresholds, *,
                     decode_steps=0) -> List[RequestResult]:
         """tokens_per_user: (U, S) int32 (each user one request)."""
-        cfg = self.cfg
-        netcfg = self.scn.cfg
         sched = self.scheduler.schedule(q_thresholds)
-        results: Dict[int, RequestResult] = {}
+        return execute_schedule(self.params, self.cfg, self.scn.cfg,
+                                self.prof, sched, tokens_per_user,
+                                decode_steps=decode_steps)
 
-        for split, users in sched.groups().items():
-            toks = tokens_per_user[users]
-            x, positions = split_runtime.device_forward(
-                self.params, cfg, toks, split)
-            crossing_bits = (float(x[0].size) * x.dtype.itemsize * 8)
 
-            logits = split_runtime.edge_forward(
-                self.params, cfg, x, positions, split)
-            next_tok = np.asarray(jnp.argmax(logits[:, -1], -1))
+class MultiCellServeEngine:
+    """Serves B cells per round: one batched schedule, per-cell execution.
 
-            dev_fl = float(self.prof.device_flops[split])
-            edge_fl = float(self.prof.edge_flops[split])
-            for row, u in enumerate(users):
-                r_up = max(float(sched.uplink_rate[u]), 1.0)
-                r_dn = max(float(sched.downlink_rate[u]), 1.0)
-                t_dev = dev_fl / netcfg.c_device_flops
-                t_up = (crossing_bits / r_up) if split < self.prof.n_layers \
-                    else 0.0
-                eff = lam(float(sched.compute_units[u]), netcfg) \
-                    * netcfg.c_min_flops
-                t_edge = edge_fl / eff
-                t_dn = (float(self.prof.result_bits) / r_dn) \
-                    if split < self.prof.n_layers else 0.0
-                results[int(u)] = RequestResult(
-                    user=int(u),
-                    tokens_out=next_tok[row:row + 1],
-                    latency_s=t_dev + t_up + t_edge + t_dn,
-                    t_device=t_dev, t_uplink=t_up,
-                    t_edge=t_edge, t_downlink=t_dn,
-                )
+    All cells serve the same model parameters (one edge deployment); the
+    scheduler may still carry per-cell split profiles (e.g. different
+    request lengths)."""
 
-        if decode_steps:
-            self._continue_decode(tokens_per_user, sched, results,
-                                  decode_steps)
-        return [results[u] for u in sorted(results)]
+    def __init__(self, params, cfg, scns, scheduler: MultiCellScheduler):
+        self.params = params
+        self.cfg = cfg
+        self.scns = list(scns)
+        self.scheduler = scheduler          # profiles come from here too
 
-    def _continue_decode(self, tokens, sched, results, n_steps):
-        """Greedy decode continuation on the edge (full model, cached)."""
-        cfg = self.cfg
-        s = tokens.shape[1]
-        logits, caches, _ = T.prefill(self.params, cfg, tokens,
-                                      max_seq=s + n_steps + 1)
-        cur = jnp.argmax(logits[:, -1], -1)
-        outs = [np.asarray(cur)]
-        for step in range(n_steps - 1):
-            logits, caches = T.decode_step(self.params, cfg, cur,
-                                           jnp.int32(s + step), caches)
-            cur = jnp.argmax(logits, -1)
-            outs.append(np.asarray(cur))
-        seq = np.stack(outs, 1)
-        for u, r in results.items():
-            r.tokens_out = seq[u]
+    def serve_round(self, tokens_per_cell, q_per_cell, *,
+                    decode_steps=0) -> List[List[RequestResult]]:
+        """tokens_per_cell: (B, U, S) int32; q_per_cell: (B, U) seconds."""
+        scheds = self.scheduler.schedule(q_per_cell)
+        rounds = []
+        for b, sched in enumerate(scheds):
+            rounds.append(execute_schedule(
+                self.params, self.cfg, self.scns[b].cfg,
+                self.scheduler.profile_for(b), sched, tokens_per_cell[b],
+                decode_steps=decode_steps))
+        return rounds

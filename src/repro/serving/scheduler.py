@@ -6,16 +6,26 @@ thresholds, it runs Li-GD and emits a Schedule: per-user split point,
 subchannel, tx power, edge compute share, plus predicted latency/energy/QoE
 — the numbers the engine uses to simulate the radio and to group edge-side
 batches.
+
+Two schedulers share one outcome->Schedule lowering:
+  EraScheduler       — one cell, the paper's setting, now on the
+                       scan-compiled sweep by default (ligd.solve).
+  MultiCellScheduler — B cells in ONE vmapped solve (ligd.solve_batch);
+                       emits one Schedule per cell.  This is the serving
+                       entry point the ROADMAP's fleet-scale work builds on:
+                       cells share a compiled program, so admission cost
+                       grows with device compute, not Python dispatch.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import era, ligd, noma, profiles
+from repro.core import ligd, noma, profiles
 from repro.core.era import Weights
 
 
@@ -40,35 +50,89 @@ class Schedule:
                 for s in np.unique(self.split)}
 
 
+@jax.jit
+def _schedule_rates(scn, alloc):
+    """Scheduled NOMA rates + hard channel picks, one compiled call."""
+    r_up = noma.uplink_rates(scn, alloc.beta_up, alloc.p)
+    r_dn = noma.downlink_rates(scn, alloc.beta_dn, alloc.p_ap)
+    return (r_up, r_dn,
+            jnp.argmax(alloc.beta_up, 1), jnp.argmax(alloc.beta_dn, 1))
+
+
+def build_schedule(scn, out: ligd.LiGDOutcome) -> Schedule:
+    """Lower a solver outcome to the engine-facing Schedule."""
+    alloc = out.alloc
+    r_up, r_dn, ch_up, ch_dn = _schedule_rates(scn, alloc)
+    return Schedule(
+        split=np.asarray(out.s),
+        subchannel_up=np.asarray(ch_up),
+        subchannel_dn=np.asarray(ch_dn),
+        power_up=np.asarray(alloc.p),
+        power_dn=np.asarray(alloc.p_ap),
+        compute_units=np.asarray(alloc.r),
+        pred_latency=np.asarray(out.terms.t),
+        pred_energy=np.asarray(out.terms.e),
+        uplink_rate=np.asarray(r_up),
+        downlink_rate=np.asarray(r_dn),
+        gamma=float(out.terms.gamma),
+        iters=out.total_iters,
+    )
+
+
 class EraScheduler:
     def __init__(self, scn, prof: profiles.SplitProfile,
                  weights: Weights = Weights(), *, per_user_split=True,
-                 max_steps=400, lr=0.05):
+                 max_steps=400, lr=0.05, compiled_sweep=True):
         self.scn = scn
         self.prof = prof
         self.weights = weights
         self.per_user_split = per_user_split
         self.max_steps = max_steps
         self.lr = lr
+        self.compiled_sweep = compiled_sweep
 
     def schedule(self, q_thresholds) -> Schedule:
         out = ligd.solve(self.scn, self.prof, jnp.asarray(q_thresholds),
                          self.weights, per_user_split=self.per_user_split,
-                         max_steps=self.max_steps, lr=self.lr)
-        alloc = out.alloc
-        r_up = noma.uplink_rates(self.scn, alloc.beta_up, alloc.p)
-        r_dn = noma.downlink_rates(self.scn, alloc.beta_dn, alloc.p_ap)
-        return Schedule(
-            split=np.asarray(out.s),
-            subchannel_up=np.asarray(jnp.argmax(alloc.beta_up, 1)),
-            subchannel_dn=np.asarray(jnp.argmax(alloc.beta_dn, 1)),
-            power_up=np.asarray(alloc.p),
-            power_dn=np.asarray(alloc.p_ap),
-            compute_units=np.asarray(alloc.r),
-            pred_latency=np.asarray(out.terms.t),
-            pred_energy=np.asarray(out.terms.e),
-            uplink_rate=np.asarray(r_up),
-            downlink_rate=np.asarray(r_dn),
-            gamma=float(out.terms.gamma),
-            iters=out.total_iters,
-        )
+                         max_steps=self.max_steps, lr=self.lr,
+                         compiled_sweep=self.compiled_sweep)
+        return build_schedule(self.scn, out)
+
+
+class MultiCellScheduler:
+    """Schedules B independent cells from ONE batched Li-GD solve.
+
+    ``scns``: per-cell Scenarios sharing a NetworkConfig (stacked once at
+    construction).  ``prof``: one shared SplitProfile, or a per-cell list
+    with equal layer counts.  ``schedule`` takes (B, U) QoE thresholds and
+    returns one Schedule per cell."""
+
+    def __init__(self, scns: Sequence, prof,
+                 weights: Weights = Weights(), *, per_user_split=True,
+                 max_steps=400, lr=0.05):
+        self.scns = list(scns)
+        # round-invariant solver inputs (stacked scenarios/profiles,
+        # warm-start predecessors) are derived once, not per schedule()
+        self.prep = ligd.prepare_batch(self.scns, prof)
+        self.prof = prof
+        self.weights = weights
+        self.per_user_split = per_user_split
+        self.max_steps = max_steps
+        self.lr = lr
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.scns)
+
+    def profile_for(self, cell: int) -> profiles.SplitProfile:
+        return self.prof[cell] if isinstance(self.prof, (list, tuple)) \
+            else self.prof
+
+    def schedule(self, q_per_cell) -> List[Schedule]:
+        q = jnp.asarray(q_per_cell)
+        outs = ligd.solve_batch(self.scns, self.prof, q, self.weights,
+                                per_user_split=self.per_user_split,
+                                max_steps=self.max_steps, lr=self.lr,
+                                prep=self.prep)
+        return [build_schedule(scn, out)
+                for scn, out in zip(self.scns, outs)]

@@ -25,6 +25,11 @@ def _scan_and_unroll(n, m=128):
     return cs, cu, 2.0 * n * m * m * m
 
 
+def _xla_cost(compiled):
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, list) else ca  # list on older jax
+
+
 def test_scan_trip_count_multiplication():
     cs, cu, want = _scan_and_unroll(8)
     ps = hlo_cost.analyze(cs.as_text())
@@ -32,14 +37,28 @@ def test_scan_trip_count_multiplication():
     np.testing.assert_allclose(ps.flops, want, rtol=1e-6)
     np.testing.assert_allclose(pu.flops, want, rtol=1e-6)
     # XLA's own analysis agrees on the unrolled module
-    np.testing.assert_allclose(cu.cost_analysis()["flops"], want, rtol=1e-6)
+    np.testing.assert_allclose(_xla_cost(cu)["flops"], want, rtol=1e-6)
 
 
 def test_xla_cost_analysis_undercounts_scans():
     """Documents WHY the parser exists: XLA counts a while body once."""
     cs, _, want = _scan_and_unroll(8)
-    xla_flops = cs.cost_analysis()["flops"]
+    xla_flops = _xla_cost(cs)["flops"]
     assert xla_flops < want / 4  # counts ~1 of 8 iterations
+
+
+def test_tpu_tiled_layouts_parse():
+    """TPU modules annotate layouts with tiling/memory space, e.g.
+    {1,0:T(8,128)} — the opcode/operand regexes must see through them."""
+    hlo = """
+ENTRY %main (p0: f32[8,16], p1: f32[16,4]) -> f32[8,4] {
+  %p0 = f32[8,16]{1,0:T(8,128)} parameter(0)
+  %p1 = f32[16,4]{1,0:T(8,128)} parameter(1)
+  ROOT %dot.1 = f32[8,4]{1,0:T(8,128)} dot(f32[8,16]{1,0:T(8,128)} %p0, f32[16,4]{1,0:T(8,128)} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    np.testing.assert_allclose(cost.flops, 2 * 8 * 4 * 16)
 
 
 def test_nested_scan():
@@ -69,8 +88,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch import hlo_cost
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("model",))
 def f(x, w):
     y = x @ w           # w sharded on contraction dim -> all-reduce
     return y

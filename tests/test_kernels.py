@@ -22,6 +22,7 @@ FLASH_CASES = [
 
 
 @pytest.mark.parametrize("b,s,h,kh,d,window,dtype", FLASH_CASES)
+@pytest.mark.slow
 def test_flash_attention_sweep(b, s, h, kh, d, window, dtype):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (b, s, h, d), dtype)
@@ -45,6 +46,7 @@ SSD_CASES = [
 
 
 @pytest.mark.parametrize("bt,l,h,p,n,chunk,dtype", SSD_CASES)
+@pytest.mark.slow
 def test_ssd_kernel_sweep(bt, l, h, p, n, chunk, dtype):
     ks = jax.random.split(jax.random.PRNGKey(1), 5)
     x = jax.random.normal(ks[0], (bt, l, h, p), dtype)
@@ -88,6 +90,7 @@ def test_ssd_decode_consistency():
 
 
 @pytest.mark.parametrize("m,u,bm", [(8, 32, 4), (16, 64, 8), (12, 48, 8)])
+@pytest.mark.slow
 def test_noma_rate_kernel_sweep(m, u, bm):
     ks = jax.random.split(jax.random.PRNGKey(3), 4)
     contrib = jax.random.uniform(ks[0], (m, u))

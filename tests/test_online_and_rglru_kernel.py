@@ -13,6 +13,7 @@ from repro.kernels.rglru_scan import ops as scan_ops, ref as scan_ref
     (1, 256, 256, 64, 128),
     (3, 128, 384, 128, 128),
 ])
+@pytest.mark.slow
 def test_rglru_scan_kernel_sweep(bt, l, d, lc, bd):
     ks = jax.random.split(jax.random.PRNGKey(0), 2)
     a = jax.random.uniform(ks[0], (bt, l, d), minval=0.7, maxval=0.999)
