@@ -1,14 +1,19 @@
 # Tier-1 verification targets.  `make test-fast` skips the interpret-mode
 # Pallas kernel sweeps (marked slow) — the bulk of the suite's wall clock.
+# `make test-serving` runs the serving-path regression suite (split
+# execution + async admission loop).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench bench-quick
+.PHONY: test test-fast test-serving bench bench-quick
 
 test:
 	$(PY) -m pytest -q
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
+
+test-serving:
+	$(PY) -m pytest -q tests/test_serving.py tests/test_admission.py
 
 bench:
 	$(PY) -m benchmarks.run

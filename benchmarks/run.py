@@ -22,6 +22,7 @@ MODULES = [
     ("kernels", "benchmarks.kernel_bench"),
     ("multipod", "benchmarks.multipod_scaling"),
     ("online", "benchmarks.online_rescheduling"),
+    ("admission", "benchmarks.async_admission"),
 ]
 
 

@@ -44,13 +44,16 @@ class Weights:
 
 
 def lam(r, cfg):
-    """λ(r): effective compute multiple of r allocated units."""
+    """λ(r): effective compute multiple of r allocated units.
+
+    ``cfg`` is anything with a ``lambda_exponent`` attribute — a
+    ``NetworkConfig`` on host paths, a ``CellEnv`` inside traced code."""
     return r ** cfg.lambda_exponent
 
 
 def uniform_alloc(scn, rng=None):
     """Feasible uninformed starting point (paper Table I line 1)."""
-    cfg = scn.cfg
+    cfg, env = scn.cfg, scn.env
     u, m = cfg.n_users, cfg.n_subchannels
     if rng is not None:
         b_up = jax.random.uniform(rng, (u, m))
@@ -61,16 +64,16 @@ def uniform_alloc(scn, rng=None):
         b_up = jnp.full((u, m), 1.0 / m)
         b_dn = jnp.full((u, m), 1.0 / m)
     mid = lambda lo, hi: jnp.full((u,), 0.5 * (lo + hi))
-    return Allocation(b_up, b_dn, mid(cfg.p_min_w, cfg.p_max_w),
-                      mid(cfg.ap_p_min_w, cfg.ap_p_max_w),
-                      mid(cfg.r_min, cfg.r_max))
+    return Allocation(b_up, b_dn, mid(env.p_min_w, env.p_max_w),
+                      mid(env.ap_p_min_w, env.ap_p_max_w),
+                      mid(env.r_min, env.r_max))
 
 
 def delay_terms(scn, prof, s, alloc):
     """Per-user (T_device, T_server, T_up, T_down), each (U,) seconds.
 
     ``s``: (U,) int32 split points in {0..F}."""
-    cfg = scn.cfg
+    env = scn.env
     dev_fl = prof.device_flops[s]
     edge_fl = prof.edge_flops[s]
     w_up = prof.uplink_bits[s]
@@ -79,8 +82,8 @@ def delay_terms(scn, prof, s, alloc):
     r_up = noma.uplink_rates(scn, alloc.beta_up, alloc.p)
     r_dn = noma.downlink_rates(scn, alloc.beta_dn, alloc.p_ap)
 
-    t_dev = dev_fl / cfg.c_device_flops
-    t_srv = edge_fl / (lam(alloc.r, cfg) * cfg.c_min_flops)
+    t_dev = dev_fl / env.c_device_flops
+    t_srv = edge_fl / (lam(alloc.r, env) * env.c_min_flops)
     t_up = w_up / jnp.maximum(r_up, 1.0)
     t_dn = w_dn / jnp.maximum(r_dn, 1.0)
     return t_dev, t_srv, t_up, t_dn, r_up, r_dn
@@ -88,7 +91,7 @@ def delay_terms(scn, prof, s, alloc):
 
 def energy(scn, prof, s, alloc, r_up, r_dn):
     """Per-user energy E_i (eq. 22), joules."""
-    cfg = scn.cfg
+    env = scn.env
     dev_fl = prof.device_flops[s]
     edge_fl = prof.edge_flops[s]
     w_up = prof.uplink_bits[s]
@@ -98,9 +101,9 @@ def energy(scn, prof, s, alloc, r_up, r_dn):
     # device inference costs O(0.1 J/GFLOP) and the edge pays quadratically
     # for allocating faster effective compute λ(r)·c_min — the paper's
     # resource/latency tension.
-    e_dev = cfg.xi_device * (cfg.c_device_flops ** 2) * dev_fl
-    edge_c = lam(alloc.r, cfg) * cfg.c_min_flops
-    e_edge = cfg.xi_edge * (edge_c ** 2) * edge_fl
+    e_dev = env.xi_device * (env.c_device_flops ** 2) * dev_fl
+    edge_c = lam(alloc.r, env) * env.c_min_flops
+    e_edge = env.xi_edge * (edge_c ** 2) * edge_fl
     e_up = alloc.p * w_up / jnp.maximum(r_up, 1.0)
     e_dn = alloc.p_ap * w_dn / jnp.maximum(r_dn, 1.0)
     return e_dev + e_edge + e_up + e_dn
@@ -129,13 +132,13 @@ def utility(scn, prof, s, alloc, q_thresh, w: Weights) -> Terms:
     gamma = (w.w_t * jnp.sum(t) * w.t_scale
              + w.w_q * (c * w.t_scale + z)
              + w.w_r * (jnp.sum(e) * w.e_scale
-                        + jnp.sum(lam(alloc.r, scn.cfg)) * w.r_cost_scale))
+                        + jnp.sum(lam(alloc.r, scn.env)) * w.r_cost_scale))
     return Terms(t, e, c, z, gamma)
 
 
 def clip_alloc(scn, alloc: Allocation) -> Allocation:
     """Projection onto the feasible box + β row-simplex (Σ_m β = 1)."""
-    cfg = scn.cfg
+    env = scn.env
 
     def simplex(b):
         b = jnp.clip(b, 0.0, 1.0)
@@ -144,9 +147,9 @@ def clip_alloc(scn, alloc: Allocation) -> Allocation:
     return Allocation(
         beta_up=simplex(alloc.beta_up),
         beta_dn=simplex(alloc.beta_dn),
-        p=jnp.clip(alloc.p, cfg.p_min_w, cfg.p_max_w),
-        p_ap=jnp.clip(alloc.p_ap, cfg.ap_p_min_w, cfg.ap_p_max_w),
-        r=jnp.clip(alloc.r, cfg.r_min, cfg.r_max),
+        p=jnp.clip(alloc.p, env.p_min_w, env.p_max_w),
+        p_ap=jnp.clip(alloc.p_ap, env.ap_p_min_w, env.ap_p_max_w),
+        r=jnp.clip(alloc.r, env.r_min, env.r_max),
     )
 
 

@@ -35,7 +35,10 @@ above it):
             ``adaptive``, the scenario's ``NetworkConfig`` (pytree aux) and
             the profile's layer count F (leaf shapes).  Changing any of
             these recompiles.
-  traced  — channel state (``Scenario`` leaves), profile FLOP/bit tables
+  traced  — channel state (``Scenario`` leaves), the per-cell numeric
+            network parameters (the ``CellEnv`` leaf — power/compute
+            bounds, noise floor, bandwidth …, so heterogeneous-config
+            batches vmap per lane), profile FLOP/bit tables
             (``SplitProfile`` leaves, incl. ``input_bits``/``result_bits``),
             QoE thresholds ``q``, ``lr``/``tol``, the warm-start predecessor
             index vector, and the initial allocation.  These can change
@@ -75,13 +78,15 @@ class LiGDOutcome(NamedTuple):
     total_iters: int
 
 
-def _scales(cfg):
+def _scales(env):
+    """Per-variable preconditioner ranges; ``env`` is the scenario's
+    ``CellEnv`` leaf so ranges stay per-cell under the vmapped sweep."""
     return Allocation(
         beta_up=1.0,
         beta_dn=1.0,
-        p=cfg.p_max_w - cfg.p_min_w,
-        p_ap=cfg.ap_p_max_w - cfg.ap_p_min_w,
-        r=cfg.r_max - cfg.r_min,
+        p=env.p_max_w - env.p_min_w,
+        p_ap=env.ap_p_max_w - env.ap_p_min_w,
+        r=env.r_max - env.r_min,
     )
 
 
@@ -99,7 +104,7 @@ def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
         return utility(scn, prof, s_vec, alloc, q, w).gamma
 
     grad_fn = jax.value_and_grad(loss)
-    scales = _scales(scn.cfg)
+    scales = _scales(scn.env)
 
     def cond(carry):
         _, _, k, done, _ = carry
@@ -205,20 +210,23 @@ _sweep_scan = partial(jax.jit, static_argnames=("max_steps", "w",
 
 
 @partial(jax.jit, static_argnames=("max_steps", "w", "adaptive",
-                                   "prof_batched"))
+                                   "prof_batched", "x_init_batched"))
 def _sweep_batch(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
-                 adaptive=False, prof_batched=False):
+                 adaptive=False, prof_batched=False, x_init_batched=False):
     """vmap of the scanned sweep over a leading cell axis B.
 
-    ``scn_b``/``q_b``/``pred_b`` carry the batch axis; the initial
-    allocation is shared (it depends only on the NetworkConfig box bounds);
-    ``prof`` is batched only when cells serve different split profiles."""
+    ``scn_b``/``q_b``/``pred_b`` carry the batch axis; ``prof`` is batched
+    only when cells serve different split profiles.  ``x_init`` is shared
+    by default (uninformed start from shared box bounds) and batched
+    (``x_init_batched=True``) when cells warm-start from per-cell previous
+    solutions or have heterogeneous configs."""
     return jax.vmap(
-        lambda scn, q, pred, prf: _sweep_core(
-            scn, q, x_init, pred, lr, tol, max_steps, w, prf,
+        lambda scn, q, x0, pred, prf: _sweep_core(
+            scn, q, x0, pred, lr, tol, max_steps, w, prf,
             adaptive=adaptive),
-        in_axes=(0, 0, 0, 0 if prof_batched else None),
-    )(scn_b, q_b, pred_b, prof)
+        in_axes=(0, 0, 0 if x_init_batched else None, 0,
+                 0 if prof_batched else None),
+    )(scn_b, q_b, x_init, pred_b, prof)
 
 
 def _per_user_cost(scn, prof, s_vec, alloc, q, w: Weights):
@@ -231,7 +239,24 @@ def _per_user_cost(scn, prof, s_vec, alloc, q, w: Weights):
     r_ind = qoe_mod.indicator(t, q, w.qoe_a)
     c_i = (t - q) * r_ind
     return (w.w_t * t * w.t_scale + w.w_q * (c_i * w.t_scale + r_ind)
-            + w.w_r * (e * w.e_scale + lam(alloc.r, scn.cfg) * w.r_cost_scale))
+            + w.w_r * (e * w.e_scale + lam(alloc.r, scn.env) * w.r_cost_scale))
+
+
+def stack_allocs(allocs) -> Allocation:
+    """Stack per-cell Allocations along a new leading cell axis B — e.g.
+    previous-round ``LiGDOutcome.alloc``s into a warm-start initial point
+    for the next ``solve_batch(init_alloc=...)``."""
+    allocs = list(allocs)
+    if not allocs:
+        raise ValueError("need at least one allocation")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *allocs)
+
+
+def warm_start_from(outcomes) -> Allocation:
+    """Batched warm-start point from the previous round's outcomes (the
+    loop-iteration idea extended across admission rounds: seed round t+1's
+    GD from round t's solved allocations)."""
+    return stack_allocs([o.alloc for o in outcomes])
 
 
 def soften_beta(scn, alloc: Allocation, eps: float = 0.1) -> Allocation:
@@ -437,6 +462,7 @@ class BatchPrep(NamedTuple):
     prof_list: tuple              # per-cell SplitProfiles
     prof_batched: bool
     pred_b: np.ndarray            # (B, F+1) warm-start predecessors
+    hetero: bool = False          # cells carry different numeric params
 
 
 def prepare_batch(scns, prof, warm_start: bool = True) -> BatchPrep:
@@ -465,18 +491,25 @@ def prepare_batch(scns, prof, warm_start: bool = True) -> BatchPrep:
 
     pred_b = np.stack([warm_start_predecessors(p.uplink_bits, warm_start)
                        for p in prof_list])
+    # env-leaf comparison, not cfg equality: a pre-stacked batched Scenario
+    # slices back with the representative cfg on every cell, but the env
+    # leaves always keep each cell's true numbers
+    hetero = network.envs_differ(scn_list)
     return BatchPrep(scn_b, scn_list, prof_b, prof_list, prof_batched,
-                     pred_b)
+                     pred_b, hetero)
 
 
 def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
                 max_steps=400, warm_start=True, per_user_split=False,
-                adaptive=False, prep: BatchPrep = None) -> List[LiGDOutcome]:
+                adaptive=False, prep: BatchPrep = None,
+                init_alloc: Allocation = None) -> List[LiGDOutcome]:
     """Schedule B independent cells with ONE compiled, vmapped sweep.
 
     Arguments:
-      scns: a list/tuple of ``Scenario``s sharing one NetworkConfig, or an
-        already-stacked batched Scenario (``network.stack_scenarios``).
+      scns: a list/tuple of ``Scenario``s with structurally compatible
+        NetworkConfigs (numeric fields may differ per cell — they travel
+        via the ``CellEnv`` leaf), or an already-stacked batched Scenario
+        (``network.stack_scenarios``).
       prof: one shared ``SplitProfile``, or a list of per-cell profiles
         with equal layer counts (``profiles.stack_profiles`` semantics —
         e.g. the same architecture profiled at different request lengths).
@@ -489,6 +522,13 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     ``prep``: pass a ``prepare_batch`` result to skip re-deriving the
     round-invariant stacked inputs on every call (``scns``/``prof``/
     ``warm_start`` are then ignored in its favour).
+
+    ``init_alloc`` (warm-start entry point, online ERA across rounds): a
+    batched Allocation with leading axis B — typically
+    ``warm_start_from(previous_outcomes)`` — or a list of per-cell
+    Allocations.  Hard one-hot β rows are softened back into the simplex
+    interior (``soften_beta``) before seeding layer 0's GD, exactly as the
+    single-cell ``solve(init_alloc=...)`` path does.
     """
     if prep is None:
         prep = prepare_batch(scns, prof, warm_start)
@@ -500,13 +540,31 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     if q.ndim != 2 or q.shape[0] != n_cells:
         raise ValueError(f"q must be (B, U) with B={n_cells}, got {q.shape}")
 
-    x_init = uniform_alloc(scn_list[0])    # cfg-only; identical across cells
+    hetero = prep.hetero
+    if init_alloc is not None:
+        if not isinstance(init_alloc, Allocation) \
+                and isinstance(init_alloc, (list, tuple)):
+            init_alloc = stack_allocs(init_alloc)
+        if init_alloc.p.shape[0] != n_cells:
+            raise ValueError(f"init_alloc must carry a leading B={n_cells} "
+                             f"axis, got {init_alloc.p.shape}")
+        # soften_beta only needs n_subchannels (structural) — batched-safe
+        x_init = soften_beta(scn_list[0], init_alloc)
+        x_init_batched = True
+    elif hetero:
+        # per-cell box bounds => per-cell uninformed starts
+        x_init = stack_allocs([uniform_alloc(s) for s in scn_list])
+        x_init_batched = True
+    else:
+        x_init = uniform_alloc(scn_list[0])    # identical across cells
+        x_init_batched = False
     f = prof_list[0].n_layers
     u = q.shape[1]
 
     swept = _sweep_batch(scn_b, q, x_init, jnp.asarray(pred_b), lr, tol,
                          max_steps, w, prof_b, adaptive=adaptive,
-                         prof_batched=prof_batched)
+                         prof_batched=prof_batched,
+                         x_init_batched=x_init_batched)
 
     # ---- batched finalize: every compiled stage is ONE dispatch for all
     # cells; only the greedy β rounding runs per cell (host-side) ----------

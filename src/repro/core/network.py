@@ -12,11 +12,40 @@ exponent 5, noise PSD -174 dBm/Hz, 1e4 cycles/bit.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CellEnv(NamedTuple):
+    """Numeric solver parameters of one cell, as pytree *leaves*.
+
+    ``NetworkConfig`` stays static aux data on the ``Scenario`` pytree — it
+    fixes array shapes (n_users/n_aps/n_subchannels) and host-side logic.
+    Everything the traced solve actually computes with lives here instead,
+    so (a) changing a numeric parameter never recompiles, and (b)
+    ``stack_scenarios`` can batch cells with *different* NetworkConfigs:
+    the env leaves stack to (B,) arrays and vmap hands each lane its own
+    values.  Traced code must read these fields via ``scn.env``, never
+    ``scn.cfg`` (whose numbers are only representative on a batched
+    container)."""
+    noise_w: float
+    subchannel_bw: float
+    p_min_w: float
+    p_max_w: float
+    ap_p_min_w: float
+    ap_p_max_w: float
+    sic_threshold_w: float
+    c_device_flops: float
+    c_min_flops: float
+    r_min: float
+    r_max: float
+    lambda_exponent: float
+    cycles_per_bit: float
+    xi_device: float
+    xi_edge: float
 
 
 @dataclass(frozen=True)
@@ -55,13 +84,18 @@ class NetworkConfig:
     def noise_w(self) -> float:
         return 10 ** (self.noise_psd_dbm_hz / 10.0) * 1e-3 * self.subchannel_bw
 
+    def env(self) -> CellEnv:
+        """This config's numeric parameters as vmappable leaves."""
+        return CellEnv(*(float(getattr(self, f)) for f in CellEnv._fields))
+
 
 @dataclass
 class Scenario:
     """Static per-episode channel state + precomputed SIC orderings.
 
-    Registered as a JAX pytree (cfg is static aux data) so scenarios can be
-    passed straight through jit/grad."""
+    Registered as a JAX pytree (cfg is static aux data; the numeric
+    parameters also travel as the ``env`` leaf — see ``CellEnv``) so
+    scenarios can be passed straight through jit/grad."""
     cfg: NetworkConfig
     assoc: jnp.ndarray           # (U,)  serving AP index
     h_up: jnp.ndarray            # (U, N, M) uplink |h|² user->AP
@@ -73,6 +107,11 @@ class Scenario:
     #                             member of this position's AP group
     dn_order: jnp.ndarray        # (M, U) grouped by AP, ascending gain
     dn_group_end: jnp.ndarray    # (M, U)
+    env: CellEnv = None          # numeric params as leaves (derived from cfg)
+
+    def __post_init__(self):
+        if self.env is None:
+            self.env = self.cfg.env()
 
     @property
     def n_users(self):
@@ -91,7 +130,7 @@ class Scenario:
 
 
 _SCN_FIELDS = ("assoc", "h_up", "h_dn", "up_order", "up_group_end",
-               "dn_order", "dn_group_end")
+               "dn_order", "dn_group_end", "env")
 
 
 def _scn_flatten(s):
@@ -105,12 +144,30 @@ def _scn_unflatten(cfg, children):
 jax.tree_util.register_pytree_node(Scenario, _scn_flatten, _scn_unflatten)
 
 
+# NetworkConfig fields that fix array shapes / host-side algorithm
+# structure; cells batched together must agree on these.  Every other
+# field is numeric and travels per-cell via the CellEnv leaf.
+_STRUCT_FIELDS = ("n_users", "n_aps", "n_subchannels",
+                  "max_users_per_channel")
+
+
+def struct_compatible(a: NetworkConfig, b: NetworkConfig) -> bool:
+    """True when two configs can share one batched solve (equal shapes)."""
+    return all(getattr(a, f) == getattr(b, f) for f in _STRUCT_FIELDS)
+
+
 def stack_scenarios(scns) -> Scenario:
-    """Stack same-config scenarios into one batched Scenario whose array
-    fields carry a leading cell axis B — the input shape of
-    ``ligd.solve_batch`` / any vmapped solver.  The shared ``NetworkConfig``
-    stays pytree aux data (static), so one compilation serves every batch
-    of cells with these dimensions.
+    """Stack scenarios into one batched Scenario whose array fields carry a
+    leading cell axis B — the input shape of ``ligd.solve_batch`` / any
+    vmapped solver.
+
+    Cells may have *different* NetworkConfigs as long as the configs are
+    structurally compatible (same n_users/n_aps/n_subchannels/
+    max_users_per_channel): the numeric parameters ride along in the
+    stacked ``env`` leaf, (B,) per field, and vmap hands each lane its own
+    values.  The batched container's ``cfg`` aux is the first cell's config
+    and is only *representative* — traced code must read numbers from
+    ``scn.env``.
 
     Note the batched object is a *container*, not a semantic Scenario:
     methods like ``own_gain_up`` assume unbatched fields and are only valid
@@ -118,11 +175,47 @@ def stack_scenarios(scns) -> Scenario:
     scns = list(scns)
     if not scns:
         raise ValueError("need at least one scenario")
+    ref = scns[0].cfg
     for s in scns[1:]:
-        if s.cfg != scns[0].cfg:
-            raise ValueError("stack_scenarios needs a shared NetworkConfig; "
-                             f"got {s.cfg} vs {scns[0].cfg}")
+        if not struct_compatible(s.cfg, ref):
+            raise ValueError(
+                "stack_scenarios needs structurally compatible "
+                f"NetworkConfigs ({'/'.join(_STRUCT_FIELDS)}); "
+                f"got {s.cfg} vs {ref}")
+    # normalise the static aux so tree structures match; per-cell numerics
+    # are preserved in each scenario's env leaf
+    scns = [s if s.cfg == ref else
+            Scenario(ref, s.assoc, s.h_up, s.h_dn, s.up_order,
+                     s.up_group_end, s.dn_order, s.dn_group_end, env=s.env)
+            for s in scns]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *scns)
+
+
+def envs_differ(scns) -> bool:
+    """True when the cells carry different numeric network parameters —
+    works on per-cell Scenarios whether their env leaves are floats or the
+    0-d arrays produced by slicing a stacked batch."""
+    scns = list(scns)
+    ref = scns[0].env
+    return any(
+        float(np.asarray(a)) != float(np.asarray(b))
+        for s in scns[1:] for a, b in zip(ref, s.env))
+
+
+def scenario_drift(a: Scenario, b: Scenario) -> float:
+    """Symmetric, scale-free divergence of two scenarios' channel state.
+
+    Normalised L1 distance over the uplink+downlink gain tensors:
+        d(a, b) = Σ|a−b| / (½ Σ(a+b))      (gains are nonnegative)
+    Properties: d(a, a) = 0, d(a, b) = d(b, a), and d grows smoothly with
+    Gauss-Markov fading drift — the admission loop re-schedules a cell when
+    d(live, scheduled-snapshot) exceeds its divergence threshold."""
+    if a.h_up.shape != b.h_up.shape or a.h_dn.shape != b.h_dn.shape:
+        raise ValueError("scenario_drift needs same-shape scenarios; got "
+                         f"{a.h_up.shape} vs {b.h_up.shape}")
+    num = jnp.sum(jnp.abs(a.h_up - b.h_up)) + jnp.sum(jnp.abs(a.h_dn - b.h_dn))
+    den = 0.5 * (jnp.sum(a.h_up + b.h_up) + jnp.sum(a.h_dn + b.h_dn))
+    return float(num / jnp.maximum(den, 1e-30))
 
 
 def _orderings(own_gain: np.ndarray, assoc: np.ndarray, descending: bool):
@@ -214,6 +307,7 @@ def evolve_scenario(scn: Scenario, key, rho: float = 0.9) -> Scenario:
         cfg=cfg, assoc=scn.assoc, h_up=h_up, h_dn=h_dn,
         up_order=jnp.asarray(up_order), up_group_end=jnp.asarray(up_group_end),
         dn_order=jnp.asarray(dn_order), dn_group_end=jnp.asarray(dn_group_end),
+        env=scn.env,
     )
 
 

@@ -64,7 +64,7 @@ def uplink_sinr(scn, beta_up, p):
     inter = t_other[scn.assoc]                     # (U, M)
 
     sig = p[:, None] * own
-    return sig / (jnp.maximum(intra, 0.0) + inter + cfg.noise_w)
+    return sig / (jnp.maximum(intra, 0.0) + inter + scn.env.noise_w)
 
 
 def downlink_sinr(scn, beta_dn, p_ap):
@@ -91,12 +91,12 @@ def downlink_sinr(scn, beta_dn, p_ap):
     inter = jnp.maximum(cross - own_ap, 0.0)       # see uplink clamp note
 
     sig = p_ap[:, None] * own
-    return sig / (jnp.maximum(intra, 0.0) + inter + cfg.noise_w)
+    return sig / (jnp.maximum(intra, 0.0) + inter + scn.env.noise_w)
 
 
 def rates(scn, beta, sinr, bandwidth=None):
     """Σ_m β·(B/M)·log2(1+SINR) per user. Returns (U,) bits/s."""
-    bw = scn.cfg.subchannel_bw if bandwidth is None else bandwidth
+    bw = scn.env.subchannel_bw if bandwidth is None else bandwidth
     per_ch = bw * jnp.log2(1.0 + sinr)
     return jnp.sum(beta * per_ch, axis=1)
 
@@ -116,4 +116,4 @@ def sic_feasible(scn, beta_up, p):
     own = scn.own_gain_up()
     ch = jnp.argmax(beta_up, axis=1)
     gain = jnp.take_along_axis(own, ch[:, None], axis=1)[:, 0]
-    return p * gain > scn.cfg.sic_threshold_w
+    return p * gain > scn.env.sic_threshold_w

@@ -1,1 +1,1 @@
-from repro.serving import engine, scheduler, split_runtime  # noqa: F401
+from repro.serving import admission, engine, scheduler, split_runtime  # noqa: F401

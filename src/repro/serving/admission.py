@@ -1,0 +1,343 @@
+"""Async admission loop: event-driven scheduling for the split-serving
+engine.
+
+The paper's ERA/Li-GD algorithm solves one static channel snapshot; a
+deployed scheduler re-solves continuously as users arrive and fading
+drifts (the NOMA-MEC predecessors' setting).  Before this module the
+serving layer ran in lockstep — every round paid a full blocking solve
+(``MultiCellServeEngine.serve_round``) even when nothing had changed.
+Here admission is decoupled from serving: requests keep executing on the
+installed schedules while a background solver thread batches up pending
+work and swaps in fresh schedules when they are ready.
+
+Admission round lifecycle
+-------------------------
+  1. ACCUMULATE — arrivals (users posting fresh QoE deadlines via
+     ``AdmissionController.submit``) and drift marks (cells whose live
+     channel diverged from the snapshot their active schedule was solved
+     on, via ``observe_scenario``) land in the ``AdmissionQueue``.
+     Serving continues untouched on the installed ``ScheduleSet``.  An
+     optional batching window (``min_interval_s``) keeps the solver thread
+     idle between rounds so bursts coalesce and the solve's CPU share is
+     duty-cycle bounded.
+  2. DRAIN — one admission round (``step``) drains everything queued so
+     far: all arrivals coalesce into one per-cell QoE-threshold update,
+     and the touched-cell set is the union of arrival cells and drifted
+     cells.  N arrivals never cost N solves.
+  3. SOLVE — one batched, warm-started ``ligd.solve_batch`` over the live
+     scenarios (``MultiCellScheduler.schedule(..., warm=True)``), seeded
+     from the previous round's solved allocations — the paper's
+     loop-iteration warm start extended across time.  On ``start()`` this
+     runs on the solver thread, so serving only shares the GIL with host
+     dispatch, not with the compiled solve.
+  4. SWAP — the touched cells' new schedules are installed atomically
+     (``MultiCellServeEngine.swap_schedules`` replaces ONE versioned
+     reference); rounds already executing finish on the snapshot they
+     grabbed, new rounds see the new version.  Untouched cells keep their
+     schedules.
+  5. RESET — each touched cell's reference (scenario snapshot + QoE
+     vector) is updated, so subsequent drift is measured against the
+     state its *current* schedule was actually solved on.
+
+Determinism for tests: the controller takes an injectable ``clock`` (any
+zero-arg callable returning seconds) and ``step()`` can be driven
+synchronously with no thread and no sleeps; the background thread blocks
+on a condition variable, never polls.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core import network
+from repro.serving.engine import MultiCellServeEngine
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One user posting a request with a QoE deadline into a cell."""
+    cell: int
+    user: int
+    q_s: float          # QoE latency threshold, seconds
+    t: float            # submission time (controller clock)
+
+
+class AdmissionQueue:
+    """Thread-safe accumulator for work between solver rounds.
+
+    Two kinds of work: ``Arrival``s (new/renewed user deadlines) and
+    drift marks (cells whose channel diverged).  Producers are the serving
+    side (submit / mark_dirty); the single consumer is the admission
+    round, which takes everything at once (``drain``).  ``close()``
+    rejects further arrivals but leaves queued work drainable — the
+    shutdown path drains before exiting."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._arrivals: List[Arrival] = []
+        self._dirty: Set[int] = set()
+        self._closed = False
+
+    def submit(self, arrival: Arrival) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("admission queue is closed")
+            self._arrivals.append(arrival)
+            self._cond.notify_all()
+
+    def mark_dirty(self, cell: int) -> None:
+        with self._cond:
+            if not self._closed:
+                self._dirty.add(cell)
+                self._cond.notify_all()
+
+    def drain(self) -> Tuple[List[Arrival], Set[int]]:
+        """Take all queued work (arrivals in submission order + dirty set)."""
+        with self._cond:
+            arrivals, self._arrivals = self._arrivals, []
+            dirty, self._dirty = self._dirty, set()
+            return arrivals, dirty
+
+    def has_work(self) -> bool:
+        with self._cond:
+            return bool(self._arrivals or self._dirty)
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._arrivals)
+
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def wait_for_work(self, timeout: Optional[float] = None) -> bool:
+        """Block until work is queued or the queue closes.  Returns True
+        when there is drainable work.  Condition-based — no polling."""
+        with self._cond:
+            self._cond.wait_for(
+                lambda: self._arrivals or self._dirty or self._closed,
+                timeout=timeout)
+            return bool(self._arrivals or self._dirty)
+
+
+@dataclass
+class AdmissionRound:
+    """Record of one completed admission round (step)."""
+    version: int                    # ScheduleSet version installed
+    cells: Tuple[int, ...]          # cells whose schedules were swapped
+    n_arrivals: int
+    drift: Dict[int, float]        # drift of each drift-triggered cell
+    total_iters: int               # solver iterations this round
+    t_start: float                 # controller clock at drain
+    t_installed: float             # controller clock after the swap
+
+
+class AdmissionController:
+    """Owns the admission loop around one ``MultiCellServeEngine``.
+
+    Usage (sync, deterministic — tests):
+        ctl = AdmissionController(engine, clock=fake_clock)
+        ctl.bootstrap(q0)                  # initial solve + install
+        ctl.submit(cell, user, q_s)        # arrivals accumulate
+        ctl.observe_scenario(cell, scn)    # drift marks accumulate
+        rnd = ctl.step()                   # one admission round (or None)
+
+    Usage (async — serving):
+        ctl.bootstrap(q0); ctl.start()
+        ... serving thread keeps calling engine.serve_scheduled_round ...
+        ctl.stop()                         # drains the queue, then joins
+    """
+
+    def __init__(self, engine: MultiCellServeEngine, *,
+                 drift_threshold: float = 0.15,
+                 clock: Callable[[], float] = time.monotonic,
+                 warm_start: bool = True,
+                 min_interval_s: float = 0.0):
+        self.engine = engine
+        self.scheduler = engine.scheduler
+        self.queue = AdmissionQueue()
+        self.drift_threshold = float(drift_threshold)
+        self.clock = clock
+        self.warm_start = warm_start
+        # batching window: the solver thread lets at least this long pass
+        # between admission rounds, so bursts of arrivals coalesce into one
+        # solve and the solve's CPU time is bounded to a duty-cycle slice
+        # of serving (threaded mode only; assumes a real-time clock there)
+        self.min_interval_s = float(min_interval_s)
+        self.rounds: List[AdmissionRound] = []
+        self.errors: List[BaseException] = []  # failed threaded rounds
+        self.round_done = threading.Event()   # pulses after each round
+        # live channel state and the reference snapshot each cell's active
+        # schedule was solved on (drift is measured live vs reference)
+        self._live = list(engine.scns)
+        self._ref = list(engine.scns)
+        self._q: Optional[np.ndarray] = None   # (B, U) current thresholds
+        self._state_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = threading.Event()
+        self._last_round_t: Optional[float] = None
+
+    @property
+    def n_cells(self) -> int:
+        return self.engine.n_cells
+
+    def bootstrap(self, q0) -> int:
+        """Initial blocking solve: install schedules for every cell so
+        serving can start; subsequent solves are incremental."""
+        q0 = np.asarray(q0, np.float32)
+        if q0.shape[0] != self.n_cells:
+            raise ValueError(f"q0 must be (B={self.n_cells}, U), "
+                             f"got {q0.shape}")
+        with self._state_lock:
+            self._q = q0.copy()
+            scheds = self.scheduler.schedule(self._q)
+            version = self.engine.install_schedules(scheds)
+            self._ref = list(self._live)
+            return version
+
+    # ---- producers (serving side) -------------------------------------
+    def submit(self, cell: int, user: int, q_s: float) -> Arrival:
+        """A user arrives (or renews its deadline) in ``cell``.  Bounds are
+        validated HERE, in the producer's thread — a malformed arrival must
+        not reach (and kill) the background solver loop."""
+        cell, user = int(cell), int(user)
+        if not 0 <= cell < self.n_cells:
+            raise ValueError(f"cell {cell} out of range [0, {self.n_cells})")
+        with self._state_lock:
+            n_users = None if self._q is None else self._q.shape[1]
+        if n_users is not None and not 0 <= user < n_users:
+            raise ValueError(f"user {user} out of range [0, {n_users})")
+        arrival = Arrival(cell, user, float(q_s), self.clock())
+        self.queue.submit(arrival)
+        return arrival
+
+    def observe_scenario(self, cell: int, scn) -> float:
+        """Publish a cell's live channel snapshot; returns its drift vs.
+        the snapshot the active schedule was solved on, and marks the cell
+        for re-scheduling when past the divergence threshold."""
+        cell = int(cell)
+        if not 0 <= cell < self.n_cells:
+            raise ValueError(f"cell {cell} out of range [0, {self.n_cells})")
+        with self._state_lock:
+            self._live[cell] = scn
+            drift = network.scenario_drift(scn, self._ref[cell])
+        self.engine.set_scenario(cell, scn)
+        if drift > self.drift_threshold:
+            self.queue.mark_dirty(cell)
+        return drift
+
+    # ---- the admission round (consumer) -------------------------------
+    def step(self) -> Optional[AdmissionRound]:
+        """Run one admission round; returns None when nothing is pending.
+
+        Everything queued so far is handled by ONE batched solve: the
+        batch shape is round-invariant (all B cells solve — lanes are
+        compiled together), but only touched cells' schedules are swapped
+        and only their references reset."""
+        arrivals, dirty = self.queue.drain()
+        if not arrivals and not dirty:
+            return None
+        if self._q is None:
+            raise RuntimeError("bootstrap() before running admission rounds")
+        t_start = self.clock()
+        with self._state_lock:
+            for a in arrivals:
+                self._q[a.cell, a.user] = a.q_s
+            touched = sorted(dirty | {a.cell for a in arrivals})
+            drift = {b: network.scenario_drift(self._live[b], self._ref[b])
+                     for b in sorted(dirty)}
+            # snapshot the scenarios this round actually solves: _live may
+            # move again while the solve runs, and the drift reference must
+            # be the state the installed schedule was solved ON
+            solved = list(self._live)
+            self.scheduler.update_scenarios(solved)
+            q = self._q.copy()
+
+        scheds = self.scheduler.schedule(q, warm=self.warm_start)
+        iters = sum(o.total_iters for o in self.scheduler.last_outcomes)
+        version = self.engine.swap_schedules(
+            {b: scheds[b] for b in touched})
+
+        with self._state_lock:
+            for b in touched:
+                self._ref[b] = solved[b]
+        rnd = AdmissionRound(
+            version=version, cells=tuple(touched),
+            n_arrivals=len(arrivals), drift=drift, total_iters=iters,
+            t_start=t_start, t_installed=self.clock())
+        self._last_round_t = rnd.t_installed
+        self.rounds.append(rnd)
+        self.round_done.set()
+        return rnd
+
+    # ---- background solver thread -------------------------------------
+    def start(self) -> None:
+        """Run admission rounds on a dedicated solver thread.  The thread
+        blocks on the queue's condition variable between rounds (no
+        polling); serving threads keep executing installed schedules."""
+        if self._thread is not None:
+            raise RuntimeError("admission loop already started")
+        self._stopping.clear()
+        self._thread = threading.Thread(
+            target=self._run, name="admission-solver", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            has_work = self.queue.wait_for_work()
+            if not has_work:
+                if self.queue.closed or self._stopping.is_set():
+                    # closed and fully drained -> exit
+                    return
+                continue
+            if (self.min_interval_s > 0 and self._last_round_t is not None
+                    and not self.queue.closed):
+                # batching window: keep accumulating arrivals until the
+                # interval elapses (interruptible so stop() drains promptly)
+                remaining = self.min_interval_s \
+                    - (self.clock() - self._last_round_t)
+                if remaining > 0:
+                    self._stopping.wait(remaining)
+            try:
+                self.step()
+            except Exception as exc:   # noqa: BLE001 — loop must survive
+                # a failed round must not kill the loop: serving would
+                # silently run on stale schedules forever.  Record it and
+                # keep consuming (the queue was already drained, so the
+                # failing work does not wedge the loop).
+                self.errors.append(exc)
+                self.round_done.set()
+
+    def stop(self, drain: bool = True) -> None:
+        """Shut the loop down.  ``drain=True`` (default) processes any
+        still-queued arrivals/drift marks in a final round before the
+        thread exits; ``drain=False`` discards them."""
+        self._stopping.set()
+        if not drain:
+            self.queue.drain()
+        self.queue.close()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if drain and self.queue.has_work():
+            # loop never started (sync use) — drain inline
+            self.step()
+
+    # ---- introspection -------------------------------------------------
+    def current_q(self) -> np.ndarray:
+        with self._state_lock:
+            return None if self._q is None else self._q.copy()
+
+    def reference_scenario(self, cell: int):
+        with self._state_lock:
+            return self._ref[cell]

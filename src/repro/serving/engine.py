@@ -18,8 +18,9 @@ then reuses the same per-cell execution path (``execute_schedule``).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -119,27 +120,112 @@ class SplitServeEngine:
                                 decode_steps=decode_steps)
 
 
+@dataclass(frozen=True)
+class ScheduleSet:
+    """Immutable installed-schedule snapshot.  Swapped as ONE reference
+    under the engine lock, so a reader either sees the whole previous
+    round's schedules or the whole new one — never a mix (the admission
+    loop's swap-atomicity contract)."""
+    version: int
+    schedules: Tuple[Schedule, ...]        # one per cell
+
+
 class MultiCellServeEngine:
     """Serves B cells per round: one batched schedule, per-cell execution.
 
     All cells serve the same model parameters (one edge deployment); the
     scheduler may still carry per-cell split profiles (e.g. different
-    request lengths)."""
+    request lengths).
+
+    Two serving modes:
+      ``serve_round``            — lockstep: solve, install, execute (the
+                                   pre-async behaviour, kept for
+                                   benchmarking the synchronous baseline).
+      ``serve_scheduled_round``  — event-driven: execute the currently
+                                   installed ``ScheduleSet`` without
+                                   touching the solver.  The admission
+                                   loop (serving.admission) installs fresh
+                                   schedules concurrently via
+                                   ``install_schedules``/``swap_schedules``;
+                                   in-flight rounds keep the snapshot they
+                                   grabbed at round start."""
 
     def __init__(self, params, cfg, scns, scheduler: MultiCellScheduler):
         self.params = params
         self.cfg = cfg
         self.scns = list(scns)
         self.scheduler = scheduler          # profiles come from here too
+        self._lock = threading.Lock()
+        self._installed: Optional[ScheduleSet] = None
 
-    def serve_round(self, tokens_per_cell, q_per_cell, *,
-                    decode_steps=0) -> List[List[RequestResult]]:
-        """tokens_per_cell: (B, U, S) int32; q_per_cell: (B, U) seconds."""
-        scheds = self.scheduler.schedule(q_per_cell)
+    @property
+    def n_cells(self) -> int:
+        return len(self.scns)
+
+    # ---- schedule store ------------------------------------------------
+    def install_schedules(self, scheds: Sequence[Schedule]) -> int:
+        """Atomically replace every cell's schedule; returns new version."""
+        scheds = tuple(scheds)
+        if len(scheds) != self.n_cells:
+            raise ValueError(f"need {self.n_cells} schedules, "
+                             f"got {len(scheds)}")
+        with self._lock:
+            version = (self._installed.version + 1) if self._installed else 1
+            self._installed = ScheduleSet(version, scheds)
+            return version
+
+    def swap_schedules(self, per_cell: Dict[int, Schedule]) -> int:
+        """Atomically swap a subset of cells' schedules (admission rounds
+        touch only drifted/arrival cells); untouched cells keep theirs."""
+        with self._lock:
+            if self._installed is None:
+                raise RuntimeError("no schedules installed yet "
+                                   "(bootstrap with install_schedules)")
+            scheds = list(self._installed.schedules)
+            for b, sched in per_cell.items():
+                scheds[b] = sched
+            version = self._installed.version + 1
+            self._installed = ScheduleSet(version, tuple(scheds))
+            return version
+
+    def current_schedules(self) -> Optional[ScheduleSet]:
+        """Consistent snapshot (single reference read under the lock)."""
+        with self._lock:
+            return self._installed
+
+    @property
+    def schedule_version(self) -> int:
+        ss = self.current_schedules()
+        return ss.version if ss else 0
+
+    def set_scenario(self, cell: int, scn) -> None:
+        """Publish a drifted channel snapshot for one cell (the execute
+        path reads only host-side config off it; schedules are re-solved
+        by the admission loop, not here)."""
+        with self._lock:
+            self.scns[cell] = scn
+
+    # ---- serving -------------------------------------------------------
+    def serve_scheduled_round(self, tokens_per_cell, *, decode_steps=0
+                              ) -> List[List[RequestResult]]:
+        """Execute one round with the installed schedules — no solve."""
+        ss = self.current_schedules()
+        if ss is None:
+            raise RuntimeError("no schedules installed yet "
+                               "(bootstrap with install_schedules)")
         rounds = []
-        for b, sched in enumerate(scheds):
+        for b, sched in enumerate(ss.schedules):
             rounds.append(execute_schedule(
                 self.params, self.cfg, self.scns[b].cfg,
                 self.scheduler.profile_for(b), sched, tokens_per_cell[b],
                 decode_steps=decode_steps))
         return rounds
+
+    def serve_round(self, tokens_per_cell, q_per_cell, *,
+                    decode_steps=0) -> List[List[RequestResult]]:
+        """Lockstep solve -> install -> execute.
+        tokens_per_cell: (B, U, S) int32; q_per_cell: (B, U) seconds."""
+        scheds = self.scheduler.schedule(q_per_cell)
+        self.install_schedules(scheds)
+        return self.serve_scheduled_round(tokens_per_cell,
+                                          decode_steps=decode_steps)

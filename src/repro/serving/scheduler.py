@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ligd, noma, profiles
+from repro.core import ligd, network, noma, profiles
 from repro.core.era import Weights
 
 
@@ -82,19 +82,20 @@ def build_schedule(scn, out: ligd.LiGDOutcome) -> Schedule:
 class EraScheduler:
     def __init__(self, scn, prof: profiles.SplitProfile,
                  weights: Weights = Weights(), *, per_user_split=True,
-                 max_steps=400, lr=0.05, compiled_sweep=True):
+                 max_steps=400, lr=0.05, tol=1e-5, compiled_sweep=True):
         self.scn = scn
         self.prof = prof
         self.weights = weights
         self.per_user_split = per_user_split
         self.max_steps = max_steps
         self.lr = lr
+        self.tol = tol
         self.compiled_sweep = compiled_sweep
 
     def schedule(self, q_thresholds) -> Schedule:
         out = ligd.solve(self.scn, self.prof, jnp.asarray(q_thresholds),
                          self.weights, per_user_split=self.per_user_split,
-                         max_steps=self.max_steps, lr=self.lr,
+                         max_steps=self.max_steps, lr=self.lr, tol=self.tol,
                          compiled_sweep=self.compiled_sweep)
         return build_schedule(self.scn, out)
 
@@ -109,7 +110,7 @@ class MultiCellScheduler:
 
     def __init__(self, scns: Sequence, prof,
                  weights: Weights = Weights(), *, per_user_split=True,
-                 max_steps=400, lr=0.05):
+                 max_steps=400, lr=0.05, tol=1e-5):
         self.scns = list(scns)
         # round-invariant solver inputs (stacked scenarios/profiles,
         # warm-start predecessors) are derived once, not per schedule()
@@ -119,6 +120,8 @@ class MultiCellScheduler:
         self.per_user_split = per_user_split
         self.max_steps = max_steps
         self.lr = lr
+        self.tol = tol
+        self.last_outcomes: List[ligd.LiGDOutcome] = []
 
     @property
     def n_cells(self) -> int:
@@ -128,11 +131,36 @@ class MultiCellScheduler:
         return self.prof[cell] if isinstance(self.prof, (list, tuple)) \
             else self.prof
 
-    def schedule(self, q_per_cell) -> List[Schedule]:
+    def update_scenarios(self, scns: Sequence) -> None:
+        """Swap in drifted channel snapshots without re-deriving the
+        round-invariant prep (profiles + warm-start predecessors): only the
+        stacked scenario leaves change, same shapes, so the next
+        ``schedule`` call hits the same compilation."""
+        scns = list(scns)
+        if len(scns) != self.n_cells:
+            raise ValueError(f"need {self.n_cells} scenarios, "
+                             f"got {len(scns)}")
+        self.scns = scns
+        self.prep = self.prep._replace(
+            scn_b=network.stack_scenarios(scns), scn_list=tuple(scns),
+            hetero=network.envs_differ(scns))
+
+    def schedule(self, q_per_cell, *, warm: bool = False,
+                 init_alloc=None) -> List[Schedule]:
+        """One batched solve -> one Schedule per cell.
+
+        ``warm=True`` seeds the solve from the previous ``schedule`` call's
+        solved allocations (``ligd.warm_start_from``) — the admission
+        loop's cross-round warm start; ``init_alloc`` overrides the seed
+        explicitly."""
         q = jnp.asarray(q_per_cell)
+        if init_alloc is None and warm and self.last_outcomes:
+            init_alloc = ligd.warm_start_from(self.last_outcomes)
         outs = ligd.solve_batch(self.scns, self.prof, q, self.weights,
                                 per_user_split=self.per_user_split,
                                 max_steps=self.max_steps, lr=self.lr,
-                                prep=self.prep)
+                                tol=self.tol, prep=self.prep,
+                                init_alloc=init_alloc)
+        self.last_outcomes = outs
         return [build_schedule(scn, out)
                 for scn, out in zip(self.scns, outs)]

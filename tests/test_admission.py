@@ -1,0 +1,369 @@
+"""Async admission loop (serving.admission): arrival batching, drift-aware
+rescheduling, atomic schedule swaps, shutdown drain.
+
+Deterministic by construction: a fake clock drives all timestamps, solver
+rounds are driven synchronously via ``step()`` (no thread) except the
+shutdown test, which synchronises on joins/condition variables — no
+wall-clock sleeps anywhere in the assertions."""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ligd, network, profiles
+from repro.serving.admission import AdmissionController, AdmissionQueue, Arrival
+from repro.serving.engine import MultiCellServeEngine
+from repro.serving.scheduler import MultiCellScheduler, Schedule
+
+pytestmark = pytest.mark.admission
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _make(n_cells=2, n_users=6, n_subchannels=3, max_steps=5, seeds=None,
+          warm_start=True):
+    ncfg = network.small_config(n_users=n_users, n_subchannels=n_subchannels)
+    seeds = seeds or range(n_cells)
+    scns = [network.make_scenario(jax.random.PRNGKey(s), ncfg)
+            for s in seeds]
+    prof = profiles.get_profile("nin")
+    sched = MultiCellScheduler(scns, prof, per_user_split=False,
+                               max_steps=max_steps, tol=0.0)
+    # solver-only tests: the engine never executes a model here
+    engine = MultiCellServeEngine(None, None, scns, sched)
+    clock = FakeClock()
+    ctl = AdmissionController(engine, clock=clock, drift_threshold=0.15,
+                              warm_start=warm_start)
+    return engine, ctl, clock, scns
+
+
+def _q0(ctl, val=0.4):
+    return np.full((ctl.n_cells, 6), val, np.float32)
+
+
+# ---------------------------------------------------------------- batching
+def test_arrivals_batch_into_one_solve(monkeypatch):
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    assert engine.schedule_version == 1
+
+    calls = []
+    orig = ctl.scheduler.schedule
+
+    def counting(q, **kw):
+        calls.append(np.asarray(q).copy())
+        return orig(q, **kw)
+
+    monkeypatch.setattr(ctl.scheduler, "schedule", counting)
+
+    clock.advance(1.0)
+    ctl.submit(0, 1, 0.10)
+    ctl.submit(0, 2, 0.20)
+    ctl.submit(1, 0, 0.05)
+    ctl.submit(1, 5, 0.30)
+    assert len(ctl.queue) == 4
+
+    rnd = ctl.step()
+    # four arrivals across two cells -> ONE batched solve, one swap
+    assert len(calls) == 1
+    assert rnd.n_arrivals == 4
+    assert rnd.cells == (0, 1)
+    assert engine.schedule_version == 2
+    assert len(ctl.queue) == 0
+    # the solve saw every coalesced threshold update
+    q = ctl.current_q()
+    assert q[0, 1] == np.float32(0.10)
+    assert q[0, 2] == np.float32(0.20)
+    assert q[1, 0] == np.float32(0.05)
+    assert q[1, 5] == np.float32(0.30)
+    np.testing.assert_array_equal(calls[0], q)
+    # fake-clock timestamps flow into the round record
+    assert rnd.t_start == 1.0 and rnd.t_installed == 1.0
+
+
+def test_no_pending_work_no_solve():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    assert ctl.step() is None
+    assert engine.schedule_version == 1
+
+
+def test_arrival_only_swaps_touched_cell():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    before = engine.current_schedules()
+    ctl.submit(1, 3, 0.08)
+    rnd = ctl.step()
+    after = engine.current_schedules()
+    assert rnd.cells == (1,)
+    # untouched cell keeps the very same Schedule object; touched swaps
+    assert after.schedules[0] is before.schedules[0]
+    assert after.schedules[1] is not before.schedules[1]
+    assert after.version == before.version + 1
+
+
+# ------------------------------------------------------------------- drift
+def test_drift_below_threshold_no_resolve():
+    engine, ctl, clock, scns = _make()
+    ctl.bootstrap(_q0(ctl))
+    barely = network.evolve_scenario(scns[0], jax.random.PRNGKey(9),
+                                     rho=0.999)
+    drift = ctl.observe_scenario(0, barely)
+    assert 0.0 <= drift < ctl.drift_threshold
+    assert ctl.step() is None
+    assert engine.schedule_version == 1
+
+
+def test_drift_past_threshold_triggers_resolve_and_reference_reset():
+    engine, ctl, clock, scns = _make()
+    ctl.bootstrap(_q0(ctl))
+    heavy = network.evolve_scenario(scns[0], jax.random.PRNGKey(9), rho=0.3)
+    drift = ctl.observe_scenario(0, heavy)
+    assert drift > ctl.drift_threshold
+
+    clock.advance(2.5)
+    rnd = ctl.step()
+    assert rnd is not None and rnd.cells == (0,)
+    assert rnd.drift[0] == pytest.approx(drift)
+    assert engine.schedule_version == 2
+    # reference snapshot moved to the drifted channel: observing the same
+    # scenario again reads zero drift and queues nothing
+    assert ctl.observe_scenario(0, heavy) == 0.0
+    assert ctl.step() is None
+    # the engine's live scenario followed the observation
+    assert engine.scns[0] is heavy
+
+
+def test_drift_resolve_uses_live_scenario():
+    """The re-solve must run on the drifted channel, not the stale one:
+    its schedule matches a from-scratch solve of the live scenario
+    (warm start off so both solves share the uninformed initial point)."""
+    engine, ctl, clock, scns = _make(warm_start=False)
+    ctl.bootstrap(_q0(ctl))
+    heavy = network.evolve_scenario(scns[1], jax.random.PRNGKey(3), rho=0.2)
+    ctl.observe_scenario(1, heavy)
+    ctl.step()
+    got = engine.current_schedules().schedules[1]
+
+    prof = profiles.get_profile("nin")
+    fresh = MultiCellScheduler([engine.scns[0], heavy], prof,
+                               per_user_split=False, max_steps=5, tol=0.0)
+    want = fresh.schedule(ctl.current_q())[1]
+    np.testing.assert_array_equal(got.split, want.split)
+    np.testing.assert_allclose(got.uplink_rate, want.uplink_rate, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- warm start
+def test_admission_round_warm_starts_from_previous_solve(monkeypatch):
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+
+    seen = {}
+    orig = ligd.solve_batch
+
+    def spy(*args, **kw):
+        seen["init_alloc"] = kw.get("init_alloc")
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(ligd, "solve_batch", spy)
+    ctl.submit(0, 0, 0.12)
+    ctl.step()
+    assert seen["init_alloc"] is not None
+    # seeded from the previous round's solved allocations (leading B axis)
+    assert seen["init_alloc"].p.shape[0] == ctl.n_cells
+
+
+# ------------------------------------------------------------------ swaps
+def test_schedule_swap_is_atomic_under_concurrent_reads():
+    """Readers must never observe a half-swapped ScheduleSet: every
+    snapshot's schedules all carry the marker of one install."""
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    base = engine.current_schedules().schedules
+
+    def marked(version):
+        # stamp every cell's schedule with the installing version
+        return [dataclasses.replace(s, gamma=float(version)) for s in base]
+
+    n_installs = 200
+    stop_reading = threading.Event()
+    bad = []
+
+    def reader():
+        while not stop_reading.is_set():
+            ss = engine.current_schedules()
+            gammas = {s.gamma for s in ss.schedules}
+            if len(gammas) != 1:
+                bad.append((ss.version, gammas))
+
+    t = threading.Thread(target=reader)
+    engine.install_schedules(marked(0))
+    t.start()
+    for v in range(1, n_installs):
+        engine.install_schedules(marked(v))
+    stop_reading.set()
+    t.join()
+    assert not bad, f"torn schedule snapshots observed: {bad[:3]}"
+    assert engine.schedule_version == 1 + n_installs  # bootstrap + installs
+
+
+def test_partial_swap_preserves_other_cells():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    before = engine.current_schedules()
+    replacement = dataclasses.replace(before.schedules[0], gamma=123.0)
+    v = engine.swap_schedules({0: replacement})
+    after = engine.current_schedules()
+    assert v == before.version + 1
+    assert after.schedules[0].gamma == 123.0
+    assert after.schedules[1] is before.schedules[1]
+
+
+# ---------------------------------------------------------------- shutdown
+def test_queue_drains_on_shutdown():
+    """Arrivals still queued when stop() is called are solved in a final
+    round before the thread exits (no lost work)."""
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    ctl.start()
+    ctl.submit(0, 4, 0.07)
+    ctl.submit(1, 2, 0.09)
+    ctl.stop(drain=True)              # joins the solver thread
+    assert len(ctl.queue) == 0
+    q = ctl.current_q()
+    assert q[0, 4] == np.float32(0.07)
+    assert q[1, 2] == np.float32(0.09)
+    assert engine.schedule_version >= 2
+    # closed queue rejects late arrivals
+    with pytest.raises(RuntimeError):
+        ctl.submit(0, 0, 0.1)
+
+
+def test_stop_without_drain_discards_pending():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    v0 = engine.schedule_version
+    # no thread started: stop() must still be safe and discard the queue
+    ctl.submit(0, 1, 0.2)
+    ctl.stop(drain=False)
+    assert len(ctl.queue) == 0
+    assert engine.schedule_version == v0
+    assert ctl.current_q()[0, 1] == np.float32(0.4)  # untouched
+
+
+# ------------------------------------------------------------- robustness
+def test_submit_and_observe_validate_cell_and_user_bounds():
+    engine, ctl, clock, scns = _make()
+    ctl.bootstrap(_q0(ctl))
+    with pytest.raises(ValueError):
+        ctl.submit(5, 0, 0.1)       # cell out of range
+    with pytest.raises(ValueError):
+        ctl.submit(-1, 0, 0.1)      # would alias the last cell
+    with pytest.raises(ValueError):
+        ctl.submit(0, 99, 0.1)      # user out of range
+    with pytest.raises(ValueError):
+        ctl.observe_scenario(-1, scns[0])
+    assert len(ctl.queue) == 0      # nothing malformed reached the queue
+
+
+def test_solver_thread_survives_a_failing_round(monkeypatch):
+    """One failed solve must not kill the loop: the error is recorded and
+    the next round still installs schedules."""
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    orig = ctl.scheduler.schedule
+    calls = {"n": 0}
+
+    def flaky(q, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("solver hiccup")
+        return orig(q, **kw)
+
+    monkeypatch.setattr(ctl.scheduler, "schedule", flaky)
+    ctl.start()
+    ctl.round_done.clear()
+    ctl.submit(0, 1, 0.11)          # this round fails
+    assert ctl.round_done.wait(timeout=30)
+    ctl.round_done.clear()
+    ctl.submit(1, 2, 0.22)          # loop must still be alive
+    ctl.stop(drain=True)
+    assert len(ctl.errors) == 1
+    assert isinstance(ctl.errors[0], RuntimeError)
+    assert ctl.current_q()[1, 2] == np.float32(0.22)
+    assert engine.schedule_version >= 2
+
+
+def test_drift_reference_is_the_solved_snapshot():
+    """If the live channel moves again WHILE a round is solving, the drift
+    reference must stay on the snapshot the installed schedule was solved
+    on — not on wherever live ended up (RESET contract)."""
+    engine, ctl, clock, scns = _make(warm_start=False)
+    ctl.bootstrap(_q0(ctl))
+    s1 = network.evolve_scenario(scns[0], jax.random.PRNGKey(11), rho=0.3)
+    s2 = network.evolve_scenario(scns[0], jax.random.PRNGKey(12), rho=0.3)
+    ctl.observe_scenario(0, s1)     # past threshold -> dirty
+
+    orig = ctl.scheduler.schedule
+    during = {}
+
+    def racing(q, **kw):
+        # mid-solve, the channel moves to s2 without re-crossing the
+        # threshold relative to what this round is solving
+        out = orig(q, **kw)
+        during["drift_live"] = ctl.observe_scenario(0, s2)
+        return out
+
+    ctl.scheduler.schedule = racing
+    try:
+        rnd = ctl.step()
+    finally:
+        ctl.scheduler.schedule = orig
+    assert rnd.cells == (0,)
+    # reference = s1 (what was solved), so drift now reads s2-vs-s1 > 0,
+    # not the 0.0 a live-reference bug would report
+    assert ctl.reference_scenario(0) is s1
+    assert ctl.observe_scenario(0, s2) > 0.0
+
+
+# ------------------------------------------------------------------- queue
+def test_queue_drain_returns_everything_in_order():
+    q = AdmissionQueue()
+    a = Arrival(0, 1, 0.1, 0.0)
+    b = Arrival(1, 2, 0.2, 0.5)
+    q.submit(a)
+    q.submit(b)
+    q.mark_dirty(1)
+    assert q.has_work() and len(q) == 2
+    arrivals, dirty = q.drain()
+    assert arrivals == [a, b]
+    assert dirty == {1}
+    assert not q.has_work()
+
+
+def test_queue_wait_for_work_wakes_on_close():
+    q = AdmissionQueue()
+    woke = threading.Event()
+
+    def waiter():
+        # no work ever arrives: wait_for_work must return False on close
+        assert q.wait_for_work() is False
+        woke.set()
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    q.close()
+    t.join()
+    assert woke.is_set()

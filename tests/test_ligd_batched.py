@@ -182,16 +182,99 @@ def test_warm_start_predecessors_match_profile():
         assert pred[s] == want
 
 
-# ----------------------------------------------------------------- helpers
-def test_stack_scenarios_requires_same_config():
+# ------------------------------------------------- per-cell NetworkConfig
+def test_stack_scenarios_per_cell_configs():
+    """Numerically different configs stack (env carries per-cell values);
+    structurally incompatible ones still raise."""
     cfg_a = network.small_config(n_users=8, n_subchannels=4)
-    cfg_b = network.small_config(n_users=8, n_subchannels=4, area_m=150.0)
+    cfg_b = network.small_config(n_users=8, n_subchannels=4, area_m=150.0,
+                                 p_max_w=0.1, bandwidth_hz=20e6)
     sa = network.make_scenario(jax.random.PRNGKey(0), cfg_a)
     sb = network.make_scenario(jax.random.PRNGKey(1), cfg_b)
-    with pytest.raises(ValueError):
-        network.stack_scenarios([sa, sb])
-    stacked = network.stack_scenarios([sa, sa])
+    stacked = network.stack_scenarios([sa, sb])
     assert stacked.h_up.shape == (2,) + sa.h_up.shape
+    # the env leaf keeps each cell's own numbers, (B,) per field
+    np.testing.assert_allclose(
+        np.asarray(stacked.env.p_max_w),
+        [cfg_a.p_max_w, cfg_b.p_max_w])
+    np.testing.assert_allclose(
+        np.asarray(stacked.env.subchannel_bw),
+        [cfg_a.subchannel_bw, cfg_b.subchannel_bw])
+    # different shapes cannot share a batched solve
+    cfg_c = network.small_config(n_users=8, n_subchannels=6)
+    sc = network.make_scenario(jax.random.PRNGKey(2), cfg_c)
+    with pytest.raises(ValueError):
+        network.stack_scenarios([sa, sc])
+
+
+def test_solve_batch_heterogeneous_cell_configs():
+    """Regression (ROADMAP item): a batch mixing different power budgets /
+    bandwidths / device speeds must solve each lane with ITS OWN numbers —
+    bitwise-matching the per-cell unbatched solves on a fixed budget."""
+    cfg_a = network.small_config(n_users=8, n_subchannels=4)
+    cfg_b = network.small_config(n_users=8, n_subchannels=4,
+                                 bandwidth_hz=20e6, p_max_w=0.2,
+                                 c_device_flops=4e9, r_max=32.0)
+    scns = [network.make_scenario(jax.random.PRNGKey(0), cfg_a),
+            network.make_scenario(jax.random.PRNGKey(1), cfg_b)]
+    prof = profiles.get_profile("nin")
+    q = jnp.full((8,), 0.4)
+    outs = ligd.solve_batch(scns, prof, jnp.stack([q, q]), max_steps=5,
+                            tol=0.0)
+    for scn_i, out in zip(scns, outs):
+        single = ligd.solve(scn_i, prof, q, max_steps=5, tol=0.0)
+        np.testing.assert_allclose(out.gamma_by_layer,
+                                   single.gamma_by_layer, rtol=1e-6)
+        assert (out.s == single.s).all()
+        np.testing.assert_allclose(np.asarray(out.alloc.p),
+                                   np.asarray(single.alloc.p), rtol=1e-6)
+    # the two lanes genuinely solved different problems
+    assert not np.allclose(outs[0].gamma_by_layer, outs[1].gamma_by_layer)
+    # allocations honour each cell's own box bounds
+    assert np.asarray(outs[1].alloc.p).max() <= cfg_b.p_max_w + 1e-9
+    assert np.asarray(outs[1].alloc.r).max() <= cfg_b.r_max + 1e-6
+    # the pre-stacked input form must behave the same: heterogeneity is
+    # detected from the env leaves, not the (normalised) cfg aux, so each
+    # lane keeps its own uninformed start.  (Loose rtol: the sliced env is
+    # f32 where the list path's is f64 — one-ulp x_init differences drift
+    # a little over the fixed budget; decisions must agree.)
+    stacked = network.stack_scenarios(scns)
+    outs_stacked = ligd.solve_batch(stacked, prof, jnp.stack([q, q]),
+                                    max_steps=5, tol=0.0)
+    for o_list, o_stk in zip(outs, outs_stacked):
+        np.testing.assert_allclose(o_stk.gamma_by_layer,
+                                   o_list.gamma_by_layer, rtol=1e-2)
+        assert (o_stk.s == o_list.s).all()
+        assert np.asarray(o_stk.alloc.p).max() <= \
+            np.asarray(stacked.env.p_max_w).max() + 1e-9
+
+
+def test_solve_batch_warm_start_entry():
+    """init_alloc seeds the batched sweep: with a tiny fixed budget the
+    warm-started solve starts from (softened) previous allocations, not
+    the uninformed point — matching the equivalent single-cell warm path."""
+    cfg, _, q = _setup()
+    prof = profiles.get_profile("nin")
+    scns = [network.make_scenario(jax.random.PRNGKey(i), cfg)
+            for i in range(2)]
+    qs = jnp.stack([q] * 2)
+    prev = ligd.solve_batch(scns, prof, qs, max_steps=5, tol=0.0)
+    warm = ligd.solve_batch(scns, prof, qs, max_steps=5, tol=0.0,
+                            init_alloc=ligd.warm_start_from(prev))
+    for scn_i, prev_i, warm_i in zip(scns, prev, warm):
+        single = ligd.solve(scn_i, prof, q, max_steps=5, tol=0.0,
+                            init_alloc=prev_i.alloc)
+        np.testing.assert_allclose(warm_i.gamma_by_layer,
+                                   single.gamma_by_layer, rtol=1e-6)
+        assert (warm_i.s == single.s).all()
+    # list-of-allocs spelling is equivalent
+    warm2 = ligd.solve_batch(scns, prof, qs, max_steps=5, tol=0.0,
+                             init_alloc=[o.alloc for o in prev])
+    np.testing.assert_array_equal(warm2[0].gamma_by_layer,
+                                  warm[0].gamma_by_layer)
+
+
+# ----------------------------------------------------------------- helpers
 
 
 def test_stack_profiles_shape_and_guards():

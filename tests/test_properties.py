@@ -84,6 +84,62 @@ def test_data_pipeline_deterministic(idx):
                               np.asarray(c["tokens"]))
 
 
+# one small scenario shared across the evolve/drift property tests (the
+# SIC-ordering recompute in evolve_scenario is host-side work per example)
+_EVOLVE_SCN = None
+
+
+def _evolve_scn():
+    global _EVOLVE_SCN
+    if _EVOLVE_SCN is None:
+        cfg = network.small_config(n_users=6, n_subchannels=3)
+        _EVOLVE_SCN = network.make_scenario(jax.random.PRNGKey(3), cfg)
+    return _EVOLVE_SCN
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.0, 1.0), st.integers(0, 1000))
+def test_evolve_scenario_gains_finite_nonnegative(rho, seed):
+    """Gauss-Markov drift keeps channel gains finite and physical for any
+    memory ρ ∈ [0, 1]: a convex-ish mix of nonnegative gain tensors."""
+    scn = _evolve_scn()
+    out = network.evolve_scenario(scn, jax.random.PRNGKey(seed), rho=rho)
+    for h in (out.h_up, out.h_dn):
+        h = np.asarray(h)
+        assert np.isfinite(h).all()
+        assert (h >= 0).all()
+        assert h.mean() > 0          # channel never collapses to zero
+    # association and orderings stay well-formed
+    np.testing.assert_array_equal(np.asarray(out.assoc),
+                                  np.asarray(scn.assoc))
+    assert np.asarray(out.up_order).shape == np.asarray(scn.up_order).shape
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_evolve_scenario_rho_one_is_identity(seed):
+    """ρ=1 means full channel memory: gains must be bit-identical."""
+    scn = _evolve_scn()
+    out = network.evolve_scenario(scn, jax.random.PRNGKey(seed), rho=1.0)
+    np.testing.assert_array_equal(np.asarray(out.h_up), np.asarray(scn.h_up))
+    np.testing.assert_array_equal(np.asarray(out.h_dn), np.asarray(scn.h_dn))
+    assert network.scenario_drift(scn, out) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.0, 0.99), st.integers(0, 1000))
+def test_scenario_drift_zero_self_symmetric(rho, seed):
+    """d(a,a) = 0; d(a,b) = d(b,a); drift of a genuine evolution is > 0."""
+    scn = _evolve_scn()
+    assert network.scenario_drift(scn, scn) == 0.0
+    out = network.evolve_scenario(scn, jax.random.PRNGKey(seed), rho=rho)
+    d_ab = network.scenario_drift(scn, out)
+    d_ba = network.scenario_drift(out, scn)
+    assert d_ab == d_ba
+    assert d_ab > 0.0
+    assert np.isfinite(d_ab)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.floats(0.05, 0.9), st.floats(1.0, 60.0))
 def test_energy_increases_with_compute_allocation(frac, r_val):

@@ -1,5 +1,7 @@
 """Serving substrate: split == fused logits, ERA schedule structure, full
-serve round, latency decomposition."""
+serve round, latency decomposition, numerics across mid-stream reschedules."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +10,8 @@ import pytest
 from repro.configs import get_tiny_config
 from repro.core import network, profiles
 from repro.models import transformer as T
-from repro.serving.engine import SplitServeEngine
-from repro.serving.scheduler import EraScheduler
+from repro.serving.engine import MultiCellServeEngine, SplitServeEngine
+from repro.serving.scheduler import EraScheduler, MultiCellScheduler
 from repro.serving.split_runtime import split_inference
 
 
@@ -62,3 +64,55 @@ def test_schedule_groups_partition_users():
     assert sorted(all_users.tolist()) == list(range(10))
     assert (sched.compute_units >= scn.cfg.r_min).all()
     assert (sched.power_up <= scn.cfg.p_max_w + 1e-9).all()
+
+
+def test_split_equals_fused_across_midstream_reschedule():
+    """A mid-stream schedule swap moves users to different split points;
+    their numerics must not move at all: every round's logits path equals
+    the fused model, so decoded tokens are identical before/after the swap
+    (the admission loop's swap-the-schedule-not-the-numbers contract)."""
+    cfg = get_tiny_config("gemma-2b").replace(dtype="float32")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    ncfg = network.small_config(n_users=4, n_subchannels=3)
+    scns = [network.make_scenario(jax.random.PRNGKey(i), ncfg)
+            for i in range(2)]
+    prof = profiles.transformer_profile(cfg, seq=12)
+    sched = MultiCellScheduler(scns, prof, per_user_split=False,
+                               max_steps=20)
+    engine = MultiCellServeEngine(params, cfg, scns, sched)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 4, 12),
+                                         0, cfg.vocab_size))
+
+    engine.install_schedules(sched.schedule(np.full((2, 4), 0.1)))
+    before0 = engine.serve_scheduled_round(toks)       # split-path tokens
+    before = engine.serve_scheduled_round(toks, decode_steps=3)
+
+    # mid-stream reschedule: force every user to a different split point
+    ss = engine.current_schedules()
+    swapped = []
+    for s in ss.schedules:
+        new_split = np.where(s.split >= cfg.n_layers // 2, 0,
+                             cfg.n_layers).astype(s.split.dtype)
+        assert (new_split != s.split).any()
+        swapped.append(dataclasses.replace(s, split=new_split))
+    v = engine.install_schedules(swapped)
+    assert v == ss.version + 1
+    after0 = engine.serve_scheduled_round(toks)
+    after = engine.serve_scheduled_round(toks, decode_steps=3)
+
+    fused = {}
+    for b in range(2):
+        logits, _ = T.forward(params, cfg, jnp.asarray(toks[b]))
+        fused[b] = np.asarray(jnp.argmax(logits[:, -1], -1))
+    for b in range(2):
+        # prefill next-token through the NEW split still equals the fused
+        # model (and hence the OLD split) exactly
+        for r_old, r_new in zip(before0[b], after0[b]):
+            np.testing.assert_array_equal(r_old.tokens_out, r_new.tokens_out)
+            assert r_new.tokens_out[0] == fused[b][r_new.user]
+        # users already decoding keep their exact token stream
+        for r_old, r_new in zip(before[b], after[b]):
+            np.testing.assert_array_equal(r_old.tokens_out, r_new.tokens_out)
+        # the radio/latency simulation DID change (different split)
+        assert any(o.t_uplink != n.t_uplink or o.latency_s != n.latency_s
+                   for o, n in zip(before[b], after[b]))
