@@ -1,10 +1,13 @@
 # Tier-1 verification targets.  `make test-fast` skips the interpret-mode
 # Pallas kernel sweeps (marked slow) — the bulk of the suite's wall clock.
 # `make test-serving` runs the serving-path regression suite (split
-# execution + async admission loop).
+# execution + async admission loop).  `make test-solver` groups the solver
+# suites (ligd core / batched sweep / sharded SPMD) and forces 4 host
+# devices so the shard_map multi-device paths are exercised on CPU-only CI.
 PY := PYTHONPATH=src python
+SOLVER_DEVICES := XLA_FLAGS="--xla_force_host_platform_device_count=4"
 
-.PHONY: test test-fast test-serving bench bench-quick
+.PHONY: test test-fast test-serving test-solver bench bench-quick
 
 test:
 	$(PY) -m pytest -q
@@ -14,6 +17,10 @@ test-fast:
 
 test-serving:
 	$(PY) -m pytest -q tests/test_serving.py tests/test_admission.py
+
+test-solver:
+	$(SOLVER_DEVICES) $(PY) -m pytest -q tests/test_ligd_batched.py \
+		tests/test_sharded_solver.py tests/test_era_core.py
 
 bench:
 	$(PY) -m benchmarks.run

@@ -2,12 +2,16 @@
 
 Output contract (benchmarks/run.py): one CSV line per measurement,
 ``name,us_per_call,derived`` where ``derived`` carries the figure's headline
-quantity (speedup, reduction factor, counts …).
+quantity (speedup, reduction factor, counts …).  Every ``emit`` is also
+accumulated in ``RECORDS`` so the harness can land each benchmark's
+trajectory as a ``BENCH_<tag>.json`` (ratios + config + git sha) instead
+of stdout-only CSV.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +21,10 @@ from repro.core import baselines, ligd, network, profiles
 from repro.core.era import Weights
 
 MODELS = ("nin", "yolov2", "vgg16")
+
+# measurement trajectory of the currently-running benchmark module;
+# benchmarks/run.py clears it per module and dumps it to BENCH_<tag>.json
+RECORDS: List[Dict] = []
 
 
 def scenario(seed=0, **overrides):
@@ -36,6 +44,8 @@ def timed(fn, *args, **kw):
 
 def emit(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    RECORDS.append({"name": name, "us_per_call": float(us),
+                    "derived": str(derived)})
 
 
 def solve_era(scn, prof, q, max_steps=200, **kw):

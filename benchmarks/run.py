@@ -1,12 +1,18 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  ``--quick`` trims sweeps.
+Prints ``name,us_per_call,derived`` CSV lines AND lands each module's full
+measurement trajectory as ``BENCH_<tag>.json`` (records + run config + git
+sha) in ``--json-dir`` (default: repo root), so benchmark claims are
+reproducible artifacts, not scrollback.  ``--quick`` trims sweeps.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig06]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 
@@ -18,6 +24,7 @@ MODULES = [
     ("fig14_19", "benchmarks.fig14_19_network"),
     ("ligd", "benchmarks.ligd_convergence"),
     ("batched", "benchmarks.batched_solver"),
+    ("sharded", "benchmarks.sharded_solver"),
     ("eraplus", "benchmarks.era_plus"),
     ("kernels", "benchmarks.kernel_bench"),
     ("multipod", "benchmarks.multipod_scaling"),
@@ -25,13 +32,59 @@ MODULES = [
     ("admission", "benchmarks.async_admission"),
 ]
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — benchmarks must run without git
+        return "unknown"
+
+
+def write_json(tag: str, modname: str, records, *, quick: bool,
+               elapsed_s: float, json_dir: str) -> str:
+    import jax
+    payload = {
+        "benchmark": tag,
+        "module": modname,
+        "git_sha": git_sha(),
+        "config": {
+            "quick": quick,
+            "n_devices": len(jax.devices()),
+            "platform": jax.devices()[0].platform,
+            "jax_version": jax.__version__,
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        },
+        "elapsed_s": round(elapsed_s, 3),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "records": list(records),
+    }
+    # quick runs land under a distinct name so trimmed-sweep numbers can
+    # never silently clobber a committed full-run BENCH_<tag>.json
+    suffix = ".quick.json" if quick else ".json"
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{tag}{suffix}")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="substring filter on the module tag")
+    ap.add_argument("--json-dir", default=_REPO_ROOT,
+                    help="where BENCH_<tag>.json files land "
+                         "(default: repo root)")
     args = ap.parse_args()
+
+    from benchmarks import common
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -40,8 +93,12 @@ def main() -> None:
             continue
         mod = __import__(modname, fromlist=["run"])
         t1 = time.time()
+        common.RECORDS.clear()
         mod.run(quick=args.quick)
-        print(f"# {tag} done in {time.time()-t1:.1f}s", file=sys.stderr)
+        dt = time.time() - t1
+        path = write_json(tag, modname, common.RECORDS, quick=args.quick,
+                          elapsed_s=dt, json_dir=args.json_dir)
+        print(f"# {tag} done in {dt:.1f}s -> {path}", file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

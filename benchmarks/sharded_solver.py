@@ -1,0 +1,192 @@
+"""Tentpole metrics for the sharded/lockstep-free/bucketed solver paths:
+
+  1. chunked GD (``gd_chunk``) vs the vmapped ``while_loop`` reference, on
+     a uniform workload (identical cells — lockstep costs nothing) and a
+     convergence-skewed one (one slow cell drags every lane);
+  2. bucketed partial-batch admission: device cost of a k-dirty-cell round
+     (``MultiCellScheduler.schedule(cells=...)``) vs the full-B solve it
+     replaces;
+  3. multi-device scaling: B cells sharded over a ``cells`` mesh
+     (``solve_batch(mesh=...)``) vs the single-device vmapped solve.  When
+     the process only sees one device (the default CPU run), this part
+     re-runs itself in a subprocess with
+     ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` and re-emits
+     the child's measurements, so the scaling numbers land in the same
+     BENCH_sharded.json.
+
+All timings are medians of warmed-up calls (compile time excluded).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import ligd, network, profiles
+
+B_CELLS = 8
+GD_CHUNK = 8
+SCALING_DEVICES = 4
+
+
+def _median_time(fn, n=5):
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6        # µs
+
+
+def _cells(cfg, b, *, uniform=False, skew=False):
+    """b scenarios: identical (uniform), naturally varied, or with one
+    deliberately hard cell (skew — tight power budget + fast device makes
+    the GD landscape stiff, so that lane converges far slower)."""
+    if uniform:
+        scn = network.make_scenario(jax.random.PRNGKey(0), cfg)
+        return [scn] * b
+    scns = [network.make_scenario(jax.random.PRNGKey(i), cfg)
+            for i in range(b)]
+    if skew:
+        hard = network.small_config(
+            n_users=cfg.n_users, n_subchannels=cfg.n_subchannels,
+            bandwidth_hz=cfg.bandwidth_hz, p_max_w=0.02, r_max=8.0)
+        scns[0] = network.make_scenario(jax.random.PRNGKey(100), hard)
+    return scns
+
+
+def _chunked_vs_while(cfg, prof, qs, reps, quick):
+    b = qs.shape[0]
+    for tag, kw_cells in (("uniform", dict(uniform=True)),
+                          ("skewed", dict(skew=True))):
+        scns = _cells(cfg, b, **kw_cells)
+        kw = dict(max_steps=150 if quick else 400, per_user_split=False)
+        ligd.solve_batch(scns, prof, qs, **kw)                   # warm
+        ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK, **kw)
+        us_while = _median_time(
+            lambda: ligd.solve_batch(scns, prof, qs, **kw), reps)
+        us_chunk = _median_time(
+            lambda: ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK,
+                                     **kw), reps)
+        emit(f"sharded.gd_while_us.{tag}", us_while, "")
+        emit(f"sharded.gd_chunk{GD_CHUNK}_us.{tag}", us_chunk, "")
+        emit(f"sharded.gd_chunk_speedup.{tag}", 0.0,
+             f"{us_while / us_chunk:.3f}x")
+
+
+def _bucketed_rounds(cfg, prof, qs, reps, quick):
+    from repro.serving.scheduler import MultiCellScheduler, bucket_for
+    b = qs.shape[0]
+    scns = _cells(cfg, b)
+    q_np = np.asarray(qs)
+    ms = MultiCellScheduler(scns, prof, per_user_split=False,
+                            max_steps=120, tol=0.0)
+    ms.schedule(q_np)                                            # warm full
+    us_full = _median_time(lambda: ms.schedule(q_np), reps)
+    emit(f"sharded.round_full_b{b}_us", us_full, "")
+    for k in (1, 2, 4):
+        if k >= b:
+            continue
+        cells = list(range(k))
+        ms.schedule(q_np, cells=cells)                           # warm bucket
+        us_k = _median_time(lambda: ms.schedule(q_np, cells=cells), reps)
+        emit(f"sharded.round_dirty{k}_bucket{bucket_for(k, b)}_us", us_k, "")
+        emit(f"sharded.round_dirty{k}_cheaper", 0.0,
+             f"{us_full / us_k:.2f}x")
+
+
+def _device_scaling(cfg, prof, qs, reps, quick):
+    """Runs in a process that already sees >1 device.
+
+    Three configs, so the sharding contribution is not conflated with the
+    chunked-GD fusion win: single device at the solve_batch default
+    (gd_chunk=0 — the acceptance baseline), single device with the same
+    gd_chunk the mesh run uses, and the mesh run itself."""
+    from repro.distributed import solver_mesh
+    b = qs.shape[0]
+    scns = _cells(cfg, b, skew=True)   # skew: lockstep-free sharding shines
+    n_dev = min(SCALING_DEVICES, len(jax.devices()))
+    mesh = solver_mesh.cells_mesh(n_dev)
+    kw = dict(max_steps=150 if quick else 400, per_user_split=False)
+
+    ligd.solve_batch(scns, prof, qs, **kw)                       # warm
+    ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK, **kw)
+    ligd.solve_batch(scns, prof, qs, mesh=mesh, gd_chunk=GD_CHUNK, **kw)
+    us_single = _median_time(
+        lambda: ligd.solve_batch(scns, prof, qs, **kw), reps)
+    us_single_chunk = _median_time(
+        lambda: ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK, **kw),
+        reps)
+    us_mesh = _median_time(
+        lambda: ligd.solve_batch(scns, prof, qs, mesh=mesh,
+                                 gd_chunk=GD_CHUNK, **kw), reps)
+    emit(f"sharded.cells{b}_1dev_us", us_single, "")
+    emit(f"sharded.cells{b}_1dev_chunk{GD_CHUNK}_us", us_single_chunk, "")
+    emit(f"sharded.cells{b}_{n_dev}dev_us", us_mesh, "")
+    emit(f"sharded.cells{b}_mesh_throughput_gain", 0.0,
+         f"{us_single / us_mesh:.2f}x")
+    emit(f"sharded.cells{b}_mesh_gain_vs_chunked_1dev", 0.0,
+         f"{us_single_chunk / us_mesh:.2f}x")
+
+
+def _scaling_via_subprocess(quick):
+    """Fork a child with forced host devices; re-emit its CSV lines."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{SCALING_DEVICES}").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "benchmarks.sharded_solver",
+           "--scaling-only"] + (["--quick"] if quick else [])
+    try:
+        out = subprocess.run(cmd, cwd=root, env=env, capture_output=True,
+                             text=True, timeout=1800)
+    except subprocess.TimeoutExpired:
+        # a wedged child must not abort the whole benchmark harness
+        emit("sharded.scaling_subprocess_failed", 0.0, "timeout after 1800s")
+        return
+    if out.returncode != 0:
+        err_lines = out.stderr.strip().splitlines() if out.stderr else []
+        emit("sharded.scaling_subprocess_failed", 0.0,
+             err_lines[-1][:120] if err_lines else f"rc={out.returncode}")
+        return
+    for line in out.stdout.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3 and parts[0].startswith("sharded."):
+            emit(parts[0], float(parts[1]), parts[2])
+
+
+def run(quick=False):
+    cfg = network.small_config(n_users=8, n_subchannels=4)
+    prof = profiles.get_profile("nin")
+    qs = jnp.stack([jnp.full((cfg.n_users,), 0.4)] * B_CELLS)
+    reps = 3 if quick else 5
+
+    _chunked_vs_while(cfg, prof, qs, reps, quick)
+    _bucketed_rounds(cfg, prof, qs, reps, quick)
+    if len(jax.devices()) > 1:
+        _device_scaling(cfg, prof, qs, reps, quick)
+    else:
+        _scaling_via_subprocess(quick)
+
+
+def _scaling_only(quick):
+    cfg = network.small_config(n_users=8, n_subchannels=4)
+    prof = profiles.get_profile("nin")
+    qs = jnp.stack([jnp.full((cfg.n_users,), 0.4)] * B_CELLS)
+    _device_scaling(cfg, prof, qs, 3 if quick else 5, quick)
+
+
+if __name__ == "__main__":
+    if "--scaling-only" in sys.argv:
+        _scaling_only("--quick" in sys.argv)
+    else:
+        run("--quick" in sys.argv)

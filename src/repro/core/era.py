@@ -124,7 +124,10 @@ def utility(scn, prof, s, alloc, q_thresh, w: Weights) -> Terms:
 
     Batch-safe: the Σ reductions run over the per-cell user axis of
     unbatched (U,)/(U,M) operands, so under ``vmap`` (ligd.solve_batch)
-    each cell's Γ stays independent — nothing sums across cells."""
+    each cell's Γ stays independent — nothing sums across cells.  Shard-
+    safe for the same reason: under ``shard_map`` over the ``cells`` mesh
+    axis (distributed.solver_mesh) no Γ term needs a cross-device
+    collective — the cell axis partitions cleanly."""
     t_dev, t_srv, t_up, t_dn, r_up, r_dn = delay_terms(scn, prof, s, alloc)
     t = t_dev + t_srv + t_up + t_dn
     e = energy(scn, prof, s, alloc, r_up, r_dn)

@@ -27,14 +27,31 @@ stacked ``Allocation`` buffer (``_sweep_scan``) — no per-layer dispatch, no
 host sync between layers.  ``solve(compiled_sweep=False)`` keeps the
 original per-layer Python loop as the reference implementation.
 ``solve_batch`` vmaps the scanned sweep over a leading scenario axis so one
-compiled call schedules B independent cells.
+compiled call schedules B independent cells; ``solve_batch(mesh=...)``
+additionally shards that cell axis across devices with ``shard_map``
+(``distributed.solver_mesh``) — the sweep body has no cross-cell
+reductions (noma.py/era.py batch-safety audits), so the SPMD program needs
+no collectives until the final output gather.
 
-Static vs traced argument split (applies to ``_sweep_scan`` and everything
-above it):
+Inner GD loop structure (``gd_chunk``): 0 runs the per-lane
+``while_loop`` reference — under vmap every lane steps until the slowest
+lane's layer converges (lockstep).  ``gd_chunk=k`` runs an outer
+while-of-chunks of fixed ``k``-step partially-unrolled scans whose steps
+freeze converged lanes by select, so iterates and ``iters_by_layer`` stay
+the reference's (Corollary-4 plots unchanged) while wasted work is
+bounded by ``k-1`` steps per lane, and under the cells mesh each device
+exits on its own lanes instead of the global slowest cell.
+
+Static vs traced argument split (applies to ``_sweep_scan``, the chunked
+sweep, the ``solver_mesh`` sharded sweep, and everything above them):
   static  — ``max_steps``, ``Weights`` (hashable frozen dataclass),
-            ``adaptive``, the scenario's ``NetworkConfig`` (pytree aux) and
-            the profile's layer count F (leaf shapes).  Changing any of
-            these recompiles.
+            ``adaptive``, ``gd_chunk`` (loop structure), the scenario's
+            ``NetworkConfig`` (pytree aux), the profile's layer count F
+            (leaf shapes), the padded batch size B (bucketed admission
+            maps dirty-cell counts onto a small ladder of these so each
+            bucket compiles once), and the ``Mesh`` handed to the sharded
+            path (device set + axis name).  Changing any of these
+            recompiles.
   traced  — channel state (``Scenario`` leaves), the per-cell numeric
             network parameters (the ``CellEnv`` leaf — power/compute
             bounds, noise floor, bandwidth …, so heterogeneous-config
@@ -91,14 +108,27 @@ def _scales(env):
 
 
 def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-             adaptive=False):
+             adaptive=False, gd_chunk=0):
     """Projected, preconditioned GD on Γ — pure traced function, shared by
     the per-layer jitted path and the scan-compiled sweep.
 
     ``adaptive=True`` (beyond paper — the paper's §III closing remark
     suggests self-adaptive step sizes): backtracking multiplicative step
     control — shrink 0.5× on a worsening step (and reject it), grow 1.1×
-    on an improving one."""
+    on an improving one.
+
+    ``gd_chunk=0`` (reference): a single ``while_loop`` runs until this
+    lane's own stop test fires.  Under ``vmap``/``shard_map`` that loop is
+    batched to run every lane until the SLOWEST lane stops — the lockstep
+    tax the ROADMAP names.  ``gd_chunk=k`` replaces it with an outer
+    while-of-chunks: each segment is a fixed ``k``-step ``lax.scan``
+    (partially unrolled, so XLA fuses across GD steps) whose steps freeze
+    an already-converged lane's carry via select — iterates and the
+    per-lane iteration count ``iters`` stay exactly the reference's — and
+    the outer loop exits as soon as EVERY lane in the (local) batch is
+    done.  Wasted work per lane is bounded by ``k - 1`` selected-away
+    steps, and under the cell-sharded mesh each device's outer loop exits
+    on its own lanes, not the global slowest cell."""
 
     def loss(alloc):
         return utility(scn, prof, s_vec, alloc, q, w).gamma
@@ -142,17 +172,37 @@ def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
         return (new, val, k + 1, done, cur_lr)
 
     init_val = jnp.float32(jnp.inf) if not adaptive else loss(x0)
-    alloc, gamma, iters, _, _ = jax.lax.while_loop(
-        cond, body, (x0, init_val, jnp.int32(0), jnp.bool_(False),
-                     jnp.float32(lr)))
+    carry0 = (x0, init_val, jnp.int32(0), jnp.bool_(False), jnp.float32(lr))
+
+    if gd_chunk:
+        def frozen_step(carry, _):
+            _, _, k, done, _ = carry
+            # freeze converged (or budget-exhausted) lanes: the step still
+            # computes (SIMD lanes can't branch) but its result is selected
+            # away, so the carry — iterates AND iteration count — is
+            # bit-identical to the while_loop reference's
+            keep = done | (k >= max_steps)
+            new = body(carry)
+            return jax.tree.map(
+                lambda n, o: jnp.where(keep, o, n), new, carry), None
+
+        def chunk_body(carry):
+            carry, _ = jax.lax.scan(frozen_step, carry, None,
+                                    length=gd_chunk,
+                                    unroll=min(gd_chunk, 4))
+            return carry
+
+        alloc, _, iters, _, _ = jax.lax.while_loop(cond, chunk_body, carry0)
+    else:
+        alloc, _, iters, _, _ = jax.lax.while_loop(cond, body, carry0)
     return GDResult(alloc, loss(alloc), iters)
 
 
 # per-layer entry point (sequential reference path + ERA+ polish step):
 # Scenario/SplitProfile are registered pytrees, Weights is static, so one
 # compilation serves every layer's solve.
-_gd_solve = partial(jax.jit, static_argnames=("max_steps", "w",
-                                              "adaptive"))(_gd_core)
+_gd_solve = partial(jax.jit, static_argnames=("max_steps", "w", "adaptive",
+                                              "gd_chunk"))(_gd_core)
 
 
 def warm_start_predecessors(uplink_bits, warm_start: bool = True
@@ -177,7 +227,7 @@ def warm_start_predecessors(uplink_bits, warm_start: bool = True
 
 
 def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
-                adaptive=False):
+                adaptive=False, gd_chunk=0):
     """The whole F+1 split sweep as one ``lax.scan`` (tentpole path).
 
     Carry = a stacked Allocation buffer with leading axis F+1, initialised
@@ -196,7 +246,7 @@ def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
         x0 = jax.tree.map(lambda b: b[p_idx], buf)
         s_vec = jnp.full((u,), s, jnp.int32)
         res = _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-                       adaptive=adaptive)
+                       adaptive=adaptive, gd_chunk=gd_chunk)
         buf = jax.tree.map(lambda b, a: b.at[s].set(a), buf, res.alloc)
         return buf, res
 
@@ -206,14 +256,18 @@ def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
 
 
 _sweep_scan = partial(jax.jit, static_argnames=("max_steps", "w",
-                                                "adaptive"))(_sweep_core)
+                                                "adaptive", "gd_chunk"))(
+    _sweep_core)
 
 
-@partial(jax.jit, static_argnames=("max_steps", "w", "adaptive",
-                                   "prof_batched", "x_init_batched"))
-def _sweep_batch(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
-                 adaptive=False, prof_batched=False, x_init_batched=False):
-    """vmap of the scanned sweep over a leading cell axis B.
+def _vmapped_sweep(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
+                   adaptive=False, gd_chunk=0, prof_batched=False,
+                   x_init_batched=False):
+    """Unjitted vmap of the scanned sweep over a leading cell axis — the
+    single shared definition of the batched sweep body.  Jitted directly
+    as ``_sweep_batch`` (one device) and wrapped in ``shard_map`` by
+    ``distributed.solver_mesh`` (each mesh shard vmaps its local lanes) —
+    one place to change when the sweep grows a new operand.
 
     ``scn_b``/``q_b``/``pred_b`` carry the batch axis; ``prof`` is batched
     only when cells serve different split profiles.  ``x_init`` is shared
@@ -223,10 +277,15 @@ def _sweep_batch(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
     return jax.vmap(
         lambda scn, q, x0, pred, prf: _sweep_core(
             scn, q, x0, pred, lr, tol, max_steps, w, prf,
-            adaptive=adaptive),
+            adaptive=adaptive, gd_chunk=gd_chunk),
         in_axes=(0, 0, 0 if x_init_batched else None, 0,
                  0 if prof_batched else None),
     )(scn_b, q_b, x_init, pred_b, prof)
+
+
+_sweep_batch = partial(jax.jit, static_argnames=(
+    "max_steps", "w", "adaptive", "gd_chunk", "prof_batched",
+    "x_init_batched"))(_vmapped_sweep)
 
 
 def _per_user_cost(scn, prof, s_vec, alloc, q, w: Weights):
@@ -362,7 +421,7 @@ def _finalize(scn, prof, q, w, stacked, gammas_np, iters_np, *, lr, tol,
 def solve(scn, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
           max_steps=400, warm_start=True, per_user_split=False,
           init_alloc: Allocation = None, adaptive=False,
-          key=None, compiled_sweep=True) -> LiGDOutcome:
+          key=None, compiled_sweep=True, gd_chunk=0) -> LiGDOutcome:
     """Run Li-GD (warm_start=True) or the paper's cold-start GD baseline
     (warm_start=False) over every candidate split point.
 
@@ -374,7 +433,11 @@ def solve(scn, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     ``init_alloc`` (beyond paper, "online ERA"): seed layer 1's GD from a
     previous time step's solution instead of the uninformed start — the
     loop-iteration warm-start idea extended across time, for re-scheduling
-    under channel drift (network.evolve_scenario)."""
+    under channel drift (network.evolve_scenario).
+
+    ``gd_chunk``: 0 = per-lane ``while_loop`` reference; k>0 = the
+    lockstep-mitigating chunked scan (see ``_gd_core``) — iterates match
+    the reference, only the loop structure changes."""
     x_init = (soften_beta(scn, init_alloc) if init_alloc is not None
               else uniform_alloc(scn, rng=key))
 
@@ -386,7 +449,8 @@ def solve(scn, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
 
     pred = warm_start_predecessors(prof.uplink_bits, warm_start)
     swept = _sweep_scan(scn, q, x_init, jnp.asarray(pred), lr, tol,
-                        max_steps, w, prof, adaptive=adaptive)
+                        max_steps, w, prof, adaptive=adaptive,
+                        gd_chunk=gd_chunk)
     return _finalize(scn, prof, q, w, swept.alloc,
                      np.asarray(swept.gamma), np.asarray(swept.iters),
                      lr=lr, tol=tol, max_steps=max_steps, adaptive=adaptive,
@@ -502,7 +566,8 @@ def prepare_batch(scns, prof, warm_start: bool = True) -> BatchPrep:
 def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
                 max_steps=400, warm_start=True, per_user_split=False,
                 adaptive=False, prep: BatchPrep = None,
-                init_alloc: Allocation = None) -> List[LiGDOutcome]:
+                init_alloc: Allocation = None, gd_chunk=0,
+                mesh=None) -> List[LiGDOutcome]:
     """Schedule B independent cells with ONE compiled, vmapped sweep.
 
     Arguments:
@@ -529,6 +594,16 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     Allocations.  Hard one-hot β rows are softened back into the simplex
     interior (``soften_beta``) before seeding layer 0's GD, exactly as the
     single-cell ``solve(init_alloc=...)`` path does.
+
+    ``gd_chunk``: 0 = while_loop reference GD; k>0 = chunked lockstep-free
+    GD (see ``_gd_core``).
+
+    ``mesh``: a 1-D ``jax.Mesh`` over a ``cells`` axis
+    (``distributed.solver_mesh.cells_mesh``) shards the sweep's cell axis
+    across devices via ``shard_map`` — one SPMD program, no cross-lane
+    collectives in the sweep body, only the final output gather.  Lanes
+    are padded (by repeating the last cell) up to a multiple of the mesh
+    size; padding outcomes are dropped before returning.
     """
     if prep is None:
         prep = prepare_batch(scns, prof, warm_start)
@@ -561,10 +636,17 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     f = prof_list[0].n_layers
     u = q.shape[1]
 
-    swept = _sweep_batch(scn_b, q, x_init, jnp.asarray(pred_b), lr, tol,
-                         max_steps, w, prof_b, adaptive=adaptive,
-                         prof_batched=prof_batched,
-                         x_init_batched=x_init_batched)
+    if mesh is not None:
+        from repro.distributed import solver_mesh
+        swept = solver_mesh.sharded_sweep(
+            mesh, scn_b, q, x_init, jnp.asarray(pred_b), lr, tol,
+            max_steps, w, prof_b, adaptive=adaptive, gd_chunk=gd_chunk,
+            prof_batched=prof_batched, x_init_batched=x_init_batched)
+    else:
+        swept = _sweep_batch(scn_b, q, x_init, jnp.asarray(pred_b), lr, tol,
+                             max_steps, w, prof_b, adaptive=adaptive,
+                             gd_chunk=gd_chunk, prof_batched=prof_batched,
+                             x_init_batched=x_init_batched)
 
     # ---- batched finalize: every compiled stage is ONE dispatch for all
     # cells; only the greedy β rounding runs per cell (host-side) ----------

@@ -191,6 +191,16 @@ def stack_scenarios(scns) -> Scenario:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *scns)
 
 
+def take_cells(batched, idx):
+    """Gather lanes ``idx`` from a stacked pytree (batched ``Scenario``,
+    ``SplitProfile``, ``Allocation`` …) along the leading cell axis — the
+    bucketed partial-batch admission path's device-side subset/pad gather
+    (one fused take per leaf instead of re-stacking per-cell pytrees on
+    the host every round).  ``idx`` may repeat entries (bucket padding)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), batched)
+
+
 def envs_differ(scns) -> bool:
     """True when the cells carry different numeric network parameters —
     works on per-cell Scenarios whether their env leaves are floats or the

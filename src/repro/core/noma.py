@@ -22,7 +22,11 @@ axis): every reduction here is over an explicit named axis (cumsum axis=1,
 rate sum axis=1, einsum subscripts, segment_sum over the per-cell ``assoc``)
 and every gather/scatter indexes with per-cell static orderings, so vmap
 lifts all of it cleanly — there are no full-array reductions that would
-leak across cells.
+leak across cells.  The same audit is what makes the cell axis SHARDABLE
+(distributed.solver_mesh): under ``shard_map`` nothing here needs a
+``psum``/``all_gather`` over the ``cells`` mesh axis — each shard's lanes
+are whole cells, so the sharded sweep body is collective-free and devices
+never synchronise until the final output gather.
 """
 from __future__ import annotations
 

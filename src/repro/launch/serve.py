@@ -57,6 +57,20 @@ def main():
                     help="Gauss-Markov channel memory per round")
     ap.add_argument("--drift-threshold", type=float, default=0.15,
                     help="divergence past which a cell is re-scheduled")
+    ap.add_argument("--gd-chunk", type=int, default=0,
+                    help="chunked lockstep-free GD segment length "
+                         "(0 = while_loop reference)")
+    ap.add_argument("--sharded-solver", action="store_true",
+                    help="shard the multi-cell solve over a cells mesh "
+                         "spanning all visible devices (shard_map SPMD)")
+    ap.add_argument("--full-batch-admission", action="store_true",
+                    help="disable bucketed partial rounds: every admission "
+                         "round re-solves all B cells")
+    ap.add_argument("--qoe-half-life-s", type=float, default=None,
+                    help="age idle users' QoE thresholds (doubling per "
+                         "half-life); default off")
+    ap.add_argument("--qoe-age-cap-s", type=float, default=1.0,
+                    help="upper bound on aged thresholds, seconds")
     args = ap.parse_args()
 
     import jax
@@ -93,11 +107,20 @@ def main():
         cells = max(args.cells, 1)
         scns = [network.make_scenario(jax.random.fold_in(key, 100 + b), ncfg)
                 for b in range(cells)]
+        mesh = None
+        if args.sharded_solver:
+            from repro.distributed import solver_mesh
+            mesh = solver_mesh.cells_mesh()
+            print(f"sharded solver: {mesh.shape['cells']}-device cells mesh")
         sched = MultiCellScheduler(scns, prof, per_user_split=per_user,
-                                   max_steps=120)
+                                   max_steps=120, gd_chunk=args.gd_chunk,
+                                   mesh=mesh)
         engine = MultiCellServeEngine(params, cfg, scns, sched)
         ctl = AdmissionController(engine,
-                                  drift_threshold=args.drift_threshold)
+                                  drift_threshold=args.drift_threshold,
+                                  partial_batch=not args.full_batch_admission,
+                                  qoe_half_life_s=args.qoe_half_life_s,
+                                  q_age_cap=args.qoe_age_cap_s)
         ctl.bootstrap(np.tile(q, (cells, 1)))
         toks = np.asarray(make_tokens(jax.random.fold_in(key, 2),
                                       cells * args.users))
@@ -148,8 +171,13 @@ def main():
         # token key (fold_in(key, 2)) for any cell count
         scns = [network.make_scenario(jax.random.fold_in(key, 100 + b), ncfg)
                 for b in range(args.cells)]
+        mesh = None
+        if args.sharded_solver:
+            from repro.distributed import solver_mesh
+            mesh = solver_mesh.cells_mesh()
         sched = MultiCellScheduler(scns, prof, per_user_split=per_user,
-                                   max_steps=120)
+                                   max_steps=120, gd_chunk=args.gd_chunk,
+                                   mesh=mesh)
         engine = MultiCellServeEngine(params, cfg, scns, sched)
         toks = np.asarray(make_tokens(jax.random.fold_in(key, 2),
                                       args.cells * args.users))

@@ -24,12 +24,16 @@ Admission round lifecycle
      far: all arrivals coalesce into one per-cell QoE-threshold update,
      and the touched-cell set is the union of arrival cells and drifted
      cells.  N arrivals never cost N solves.
-  3. SOLVE — one batched, warm-started ``ligd.solve_batch`` over the live
-     scenarios (``MultiCellScheduler.schedule(..., warm=True)``), seeded
-     from the previous round's solved allocations — the paper's
-     loop-iteration warm start extended across time.  On ``start()`` this
-     runs on the solver thread, so serving only shares the GIL with host
-     dispatch, not with the compiled solve.
+  3. SOLVE — one batched, warm-started solve over the touched cells
+     (``MultiCellScheduler.schedule(..., warm=True)``), seeded from the
+     previous round's solved allocations — the paper's loop-iteration
+     warm start extended across time.  With ``partial_batch`` (default)
+     a round touching k < B cells solves only those lanes, padded onto
+     the scheduler's bucket ladder (1/2/4/…/B), so a 2-dirty-cell drift
+     round costs a 2-lane sweep, not a full-B one; untouched cells'
+     warm-start state is untouched.  On ``start()`` this runs on the
+     solver thread, so serving only shares the GIL with host dispatch,
+     not with the compiled solve.
   4. SWAP — the touched cells' new schedules are installed atomically
      (``MultiCellServeEngine.swap_schedules`` replaces ONE versioned
      reference); rounds already executing finish on the snapshot they
@@ -38,6 +42,15 @@ Admission round lifecycle
   5. RESET — each touched cell's reference (scenario snapshot + QoE
      vector) is updated, so subsequent drift is measured against the
      state its *current* schedule was actually solved on.
+
+Drift-aware QoE aging (``qoe_half_life_s``): a user's posted deadline is
+only as fresh as its last arrival.  Long-idle users' thresholds relax
+exponentially — the effective threshold doubles every half-life since the
+user's last post, capped at ``q_age_cap`` — so stale tight deadlines stop
+constraining fresh rounds (a dead-session user no longer forces the
+solver to burn power/compute on its lane).  Aging applies to what the
+SOLVE sees; the posted values (``current_q``) are preserved and a new
+arrival resets the user's age to zero.
 
 Determinism for tests: the controller takes an injectable ``clock`` (any
 zero-arg callable returning seconds) and ``step()`` can be driven
@@ -55,6 +68,23 @@ import numpy as np
 
 from repro.core import network
 from repro.serving.engine import MultiCellServeEngine
+
+
+def age_thresholds(q_posted: np.ndarray, t_posted: np.ndarray, now: float,
+                   half_life_s: float, cap: Optional[float] = None
+                   ) -> np.ndarray:
+    """Drift-aware QoE aging: each threshold doubles per ``half_life_s``
+    elapsed since its user's last post, optionally capped.  Pure — unit
+    tested with the fake clock."""
+    age = np.maximum(np.asarray(now, np.float64) - t_posted, 0.0)
+    # clamp the exponent: past ~64 doublings the threshold is effectively
+    # unconstrained anyway, and an unclamped exp2 overflows float64 to inf
+    # for long-idle users when no cap is configured
+    doublings = np.minimum(age / float(half_life_s), 64.0)
+    aged = q_posted.astype(np.float64) * np.exp2(doublings)
+    if cap is not None:
+        aged = np.minimum(aged, cap)
+    return np.maximum(aged, q_posted).astype(np.float32)
 
 
 @dataclass(frozen=True)
@@ -162,13 +192,23 @@ class AdmissionController:
                  drift_threshold: float = 0.15,
                  clock: Callable[[], float] = time.monotonic,
                  warm_start: bool = True,
-                 min_interval_s: float = 0.0):
+                 min_interval_s: float = 0.0,
+                 partial_batch: bool = True,
+                 qoe_half_life_s: Optional[float] = None,
+                 q_age_cap: Optional[float] = None):
         self.engine = engine
         self.scheduler = engine.scheduler
         self.queue = AdmissionQueue()
         self.drift_threshold = float(drift_threshold)
         self.clock = clock
         self.warm_start = warm_start
+        # partial rounds: solve only touched cells on the bucket ladder
+        # (scheduler.schedule(cells=...)); False = always solve all B
+        self.partial_batch = bool(partial_batch)
+        # QoE aging: None disables; else idle users' effective thresholds
+        # double per half-life (capped), see age_thresholds
+        self.qoe_half_life_s = qoe_half_life_s
+        self.q_age_cap = q_age_cap
         # batching window: the solver thread lets at least this long pass
         # between admission rounds, so bursts of arrivals coalesce into one
         # solve and the solve's CPU time is bounded to a duty-cycle slice
@@ -181,7 +221,8 @@ class AdmissionController:
         # schedule was solved on (drift is measured live vs reference)
         self._live = list(engine.scns)
         self._ref = list(engine.scns)
-        self._q: Optional[np.ndarray] = None   # (B, U) current thresholds
+        self._q: Optional[np.ndarray] = None   # (B, U) posted thresholds
+        self._t_posted: Optional[np.ndarray] = None  # (B, U) last-post time
         self._state_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stopping = threading.Event()
@@ -200,6 +241,7 @@ class AdmissionController:
                              f"got {q0.shape}")
         with self._state_lock:
             self._q = q0.copy()
+            self._t_posted = np.full_like(q0, self.clock(), np.float64)
             scheds = self.scheduler.schedule(self._q)
             version = self.engine.install_schedules(scheds)
             self._ref = list(self._live)
@@ -209,13 +251,17 @@ class AdmissionController:
     def submit(self, cell: int, user: int, q_s: float) -> Arrival:
         """A user arrives (or renews its deadline) in ``cell``.  Bounds are
         validated HERE, in the producer's thread — a malformed arrival must
-        not reach (and kill) the background solver loop."""
+        not reach (and kill) the background solver loop.  Requires
+        ``bootstrap()`` first: the user axis is unknown (hence
+        unvalidatable) before the initial install."""
         cell, user = int(cell), int(user)
         if not 0 <= cell < self.n_cells:
             raise ValueError(f"cell {cell} out of range [0, {self.n_cells})")
         with self._state_lock:
             n_users = None if self._q is None else self._q.shape[1]
-        if n_users is not None and not 0 <= user < n_users:
+        if n_users is None:
+            raise RuntimeError("bootstrap() before submitting arrivals")
+        if not 0 <= user < n_users:
             raise ValueError(f"user {user} out of range [0, {n_users})")
         arrival = Arrival(cell, user, float(q_s), self.clock())
         self.queue.submit(arrival)
@@ -240,10 +286,12 @@ class AdmissionController:
     def step(self) -> Optional[AdmissionRound]:
         """Run one admission round; returns None when nothing is pending.
 
-        Everything queued so far is handled by ONE batched solve: the
-        batch shape is round-invariant (all B cells solve — lanes are
-        compiled together), but only touched cells' schedules are swapped
-        and only their references reset."""
+        Everything queued so far is handled by ONE batched solve.  With
+        ``partial_batch`` only the touched cells solve (padded onto the
+        scheduler's bucket ladder so every round shape is one of O(log B)
+        compiled programs); otherwise all B lanes solve and only touched
+        cells' schedules are swapped.  Either way, references reset only
+        for touched cells."""
         arrivals, dirty = self.queue.drain()
         if not arrivals and not dirty:
             return None
@@ -253,6 +301,7 @@ class AdmissionController:
         with self._state_lock:
             for a in arrivals:
                 self._q[a.cell, a.user] = a.q_s
+                self._t_posted[a.cell, a.user] = a.t
             touched = sorted(dirty | {a.cell for a in arrivals})
             drift = {b: network.scenario_drift(self._live[b], self._ref[b])
                      for b in sorted(dirty)}
@@ -260,13 +309,27 @@ class AdmissionController:
             # move again while the solve runs, and the drift reference must
             # be the state the installed schedule was solved ON
             solved = list(self._live)
-            self.scheduler.update_scenarios(solved)
-            q = self._q.copy()
+            partial = self.partial_batch and len(touched) < self.n_cells
+            q = self._effective_q_locked(t_start)
 
-        scheds = self.scheduler.schedule(q, warm=self.warm_start)
-        iters = sum(o.total_iters for o in self.scheduler.last_outcomes)
-        version = self.engine.swap_schedules(
-            {b: scheds[b] for b in touched})
+        # outside the lock: scheduler state belongs to this (single-
+        # consumer) round, and the scatter/restack dispatches must not
+        # stall serving-side submit()/observe_scenario() producers.
+        # Partial rounds scatter only the touched lanes into the stacked
+        # prep (O(k) host work); full rounds restack all B.
+        self.scheduler.update_scenarios(
+            solved, cells=touched if partial else None)
+
+        if partial:
+            subset = self.scheduler.schedule(q, warm=self.warm_start,
+                                             cells=touched)
+            per_cell = dict(zip(touched, subset))
+            iters = sum(s.iters for s in subset)      # this round's lanes
+        else:
+            scheds = self.scheduler.schedule(q, warm=self.warm_start)
+            per_cell = {b: scheds[b] for b in touched}
+            iters = sum(s.iters for s in scheds)      # all B lanes solved
+        version = self.engine.swap_schedules(per_cell)
 
         with self._state_lock:
             for b in touched:
@@ -333,10 +396,24 @@ class AdmissionController:
             # loop never started (sync use) — drain inline
             self.step()
 
+    def _effective_q_locked(self, now: float) -> np.ndarray:
+        """Thresholds the solve sees: posted values, aged when enabled.
+        Caller holds ``_state_lock``."""
+        if self.qoe_half_life_s is None:
+            return self._q.copy()
+        return age_thresholds(self._q, self._t_posted, now,
+                              self.qoe_half_life_s, self.q_age_cap)
+
     # ---- introspection -------------------------------------------------
     def current_q(self) -> np.ndarray:
         with self._state_lock:
             return None if self._q is None else self._q.copy()
+
+    def effective_q(self) -> np.ndarray:
+        """The aged thresholds a round starting now would solve with."""
+        with self._state_lock:
+            return None if self._q is None \
+                else self._effective_q_locked(self.clock())
 
     def reference_scenario(self, cell: int):
         with self._state_lock:

@@ -177,6 +177,9 @@ class MultiCellServeEngine:
     def swap_schedules(self, per_cell: Dict[int, Schedule]) -> int:
         """Atomically swap a subset of cells' schedules (admission rounds
         touch only drifted/arrival cells); untouched cells keep theirs."""
+        bad = [b for b in per_cell if not 0 <= int(b) < self.n_cells]
+        if bad:
+            raise ValueError(f"cells {bad} out of range [0, {self.n_cells})")
         with self._lock:
             if self._installed is None:
                 raise RuntimeError("no schedules installed yet "
@@ -186,6 +189,25 @@ class MultiCellServeEngine:
                 scheds[b] = sched
             version = self._installed.version + 1
             self._installed = ScheduleSet(version, tuple(scheds))
+            return version
+
+    def resize(self, scns, schedules: Sequence[Schedule]) -> int:
+        """Cell-churn stopgap: atomically replace the cell list AND its
+        schedules in one versioned swap (callers resize the scheduler
+        first — ``MultiCellScheduler.resize`` — then solve, then hand the
+        fresh schedules here).  In-flight rounds finish on the snapshot
+        they grabbed; an ``AdmissionController`` wrapped around this
+        engine must be rebuilt (its drift references are per-cell) — the
+        coordinated join/leave path stays a ROADMAP item."""
+        scns = list(scns)
+        scheds = tuple(schedules)
+        if len(scheds) != len(scns):
+            raise ValueError(f"need one schedule per cell: {len(scns)} "
+                             f"cells, {len(scheds)} schedules")
+        with self._lock:
+            version = (self._installed.version + 1) if self._installed else 1
+            self.scns = scns
+            self._installed = ScheduleSet(version, scheds)
             return version
 
     def current_schedules(self) -> Optional[ScheduleSet]:

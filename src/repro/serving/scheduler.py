@@ -15,18 +15,49 @@ Two schedulers share one outcome->Schedule lowering:
                        entry point the ROADMAP's fleet-scale work builds on:
                        cells share a compiled program, so admission cost
                        grows with device compute, not Python dispatch.
+
+Partial rounds (``schedule(cells=...)``): an admission round that touched
+k < B cells solves only those lanes, padded up a small ladder of batch
+sizes (1/2/4/…/B — ``bucket_sizes``) so each bucket compiles exactly once
+and a 2-dirty-cell drift round stops paying for a full-B sweep.  Padding
+lanes repeat a real cell and are dropped from the result (lane
+independence makes the real lanes' solutions identical to an exact-size
+solve — regression-tested).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ligd, network, noma, profiles
+from repro.core import era, ligd, network, noma, profiles
 from repro.core.era import Weights
+
+
+def bucket_sizes(n_cells: int) -> List[int]:
+    """The padded-batch ladder for partial rounds: powers of two below
+    n_cells, plus n_cells itself — at most O(log B) compiled variants."""
+    if n_cells < 1:
+        raise ValueError("need at least one cell")
+    sizes, p = [], 1
+    while p < n_cells:
+        sizes.append(p)
+        p *= 2
+    sizes.append(n_cells)
+    return sizes
+
+
+def bucket_for(k: int, n_cells: int) -> int:
+    """Smallest ladder size that fits k dirty cells."""
+    if not 1 <= k <= n_cells:
+        raise ValueError(f"k must be in [1, {n_cells}], got {k}")
+    # the ladder always ends with n_cells and k <= n_cells, so this returns
+    for n in bucket_sizes(n_cells):
+        if n >= k:
+            return n
 
 
 @dataclass
@@ -110,7 +141,7 @@ class MultiCellScheduler:
 
     def __init__(self, scns: Sequence, prof,
                  weights: Weights = Weights(), *, per_user_split=True,
-                 max_steps=400, lr=0.05, tol=1e-5):
+                 max_steps=400, lr=0.05, tol=1e-5, gd_chunk=0, mesh=None):
         self.scns = list(scns)
         # round-invariant solver inputs (stacked scenarios/profiles,
         # warm-start predecessors) are derived once, not per schedule()
@@ -121,7 +152,11 @@ class MultiCellScheduler:
         self.max_steps = max_steps
         self.lr = lr
         self.tol = tol
-        self.last_outcomes: List[ligd.LiGDOutcome] = []
+        # lockstep mitigation + SPMD sharding knobs, passed through to
+        # ligd.solve_batch (0/None = vmapped while_loop on one device)
+        self.gd_chunk = gd_chunk
+        self.mesh = mesh
+        self.last_outcomes: List[Optional[ligd.LiGDOutcome]] = []
 
     @property
     def n_cells(self) -> int:
@@ -131,36 +166,160 @@ class MultiCellScheduler:
         return self.prof[cell] if isinstance(self.prof, (list, tuple)) \
             else self.prof
 
-    def update_scenarios(self, scns: Sequence) -> None:
+    def update_scenarios(self, scns: Sequence,
+                         cells: Sequence[int] = None) -> None:
         """Swap in drifted channel snapshots without re-deriving the
         round-invariant prep (profiles + warm-start predecessors): only the
         stacked scenario leaves change, same shapes, so the next
-        ``schedule`` call hits the same compilation."""
+        ``schedule`` call hits the same compilation.
+
+        ``cells``: update only these lanes, scatter-writing them into the
+        stacked batch (``.at[b].set``) instead of re-stacking all B cells —
+        keeps a k-dirty-cell partial round's host cost O(k), not O(B).
+        Lanes outside ``cells`` keep the snapshot they were last solved
+        on, which is exactly what their installed schedules reflect."""
         scns = list(scns)
         if len(scns) != self.n_cells:
             raise ValueError(f"need {self.n_cells} scenarios, "
                              f"got {len(scns)}")
-        self.scns = scns
+        if cells is None:
+            self.scns = scns
+            self.prep = self.prep._replace(
+                scn_b=network.stack_scenarios(scns), scn_list=tuple(scns),
+                hetero=network.envs_differ(scns))
+            return
+        # flatten-level scatter: leaf order is fixed by the Scenario
+        # pytree, so lanes with different (structurally compatible) cfg
+        # aux still line up leaf-for-leaf
+        leaves_b, treedef_b = jax.tree_util.tree_flatten(self.prep.scn_b)
+        for b in cells:
+            leaves_v = jax.tree_util.tree_leaves(scns[b])
+            if len(leaves_v) != len(leaves_b):
+                # zip would silently truncate a structurally incompatible
+                # scenario into the wrong leaf slots
+                raise ValueError(
+                    f"scenario for cell {b} has {len(leaves_v)} pytree "
+                    f"leaves, stacked batch has {len(leaves_b)}")
+            self.scns[b] = scns[b]
+            leaves_b = [xb.at[b].set(xv)
+                        for xb, xv in zip(leaves_b, leaves_v)]
         self.prep = self.prep._replace(
-            scn_b=network.stack_scenarios(scns), scn_list=tuple(scns),
-            hetero=network.envs_differ(scns))
+            scn_b=jax.tree_util.tree_unflatten(treedef_b, leaves_b),
+            scn_list=tuple(self.scns),
+            hetero=network.envs_differ(self.scns))
+
+    def resize(self, scns: Sequence, prof=None, keep: Dict[int, int] = None
+               ) -> None:
+        """Cell-churn stopgap: rebuild the stacked scenarios/profiles for a
+        new cell list without dropping warm-start state for surviving
+        cells.  ``keep`` maps new cell index -> old cell index (default:
+        identity over the overlapping prefix); unmapped new cells start
+        cold (uniform initial point on their first warm solve).  The full
+        join/leave design — engine-coordinated, schedule carry-over —
+        stays a ROADMAP item."""
+        prof = self.prof if prof is None else prof
+        old_outs = self.last_outcomes
+        self.scns = list(scns)
+        self.prof = prof
+        self.prep = ligd.prepare_batch(self.scns, prof)
+        if keep is None:
+            keep = {i: i for i in range(min(len(self.scns), len(old_outs)))}
+        outs: List[Optional[ligd.LiGDOutcome]] = [None] * len(self.scns)
+        for new_i, old_i in keep.items():
+            if 0 <= new_i < len(self.scns) and 0 <= old_i < len(old_outs):
+                outs[new_i] = old_outs[old_i]
+        self.last_outcomes = outs
+
+    def _warm_init(self, lanes: Sequence[int]):
+        """Warm-start Allocation for ``lanes`` from the previous outcomes;
+        lanes without history (post-resize joiners) seed from the
+        uninformed point.  None when no lane has history."""
+        outs = self.last_outcomes
+        if not outs or all(outs[i] is None for i in lanes):
+            return None
+        return ligd.stack_allocs([
+            outs[i].alloc if outs[i] is not None
+            else era.uniform_alloc(self.scns[i]) for i in lanes])
+
+    def _prep_subset(self, lanes: Sequence[int]) -> ligd.BatchPrep:
+        """BatchPrep for a padded lane subset, sliced out of the full prep
+        (device-side gathers — no host re-stacking, and the warm-start
+        predecessor rows are reused, not recomputed)."""
+        prep = self.prep
+        scn_list = tuple(prep.scn_list[i] for i in lanes)
+        prof_b = network.take_cells(prep.prof_b, lanes) \
+            if prep.prof_batched else prep.prof_b
+        return ligd.BatchPrep(
+            scn_b=network.take_cells(prep.scn_b, lanes),
+            scn_list=scn_list,
+            prof_b=prof_b,
+            prof_list=tuple(prep.prof_list[i] for i in lanes),
+            prof_batched=prep.prof_batched,
+            pred_b=prep.pred_b[list(lanes)],
+            hetero=network.envs_differ(scn_list),
+        )
 
     def schedule(self, q_per_cell, *, warm: bool = False,
-                 init_alloc=None) -> List[Schedule]:
+                 init_alloc=None, cells: Sequence[int] = None
+                 ) -> List[Schedule]:
         """One batched solve -> one Schedule per cell.
 
         ``warm=True`` seeds the solve from the previous ``schedule`` call's
         solved allocations (``ligd.warm_start_from``) — the admission
         loop's cross-round warm start; ``init_alloc`` overrides the seed
-        explicitly."""
+        explicitly.
+
+        ``cells``: solve only this cell subset (a partial admission
+        round), padded to the smallest ``bucket_sizes`` ladder entry that
+        fits — per-bucket shapes hit jit's compile cache, so each bucket
+        size compiles once.  Returns Schedules aligned with ``cells``
+        order; other cells' warm-start state is left untouched."""
         q = jnp.asarray(q_per_cell)
+        if cells is not None:
+            return self._schedule_subset(q, list(cells), warm=warm,
+                                         init_alloc=init_alloc)
         if init_alloc is None and warm and self.last_outcomes:
-            init_alloc = ligd.warm_start_from(self.last_outcomes)
+            init_alloc = self._warm_init(range(self.n_cells))
         outs = ligd.solve_batch(self.scns, self.prof, q, self.weights,
                                 per_user_split=self.per_user_split,
                                 max_steps=self.max_steps, lr=self.lr,
                                 tol=self.tol, prep=self.prep,
-                                init_alloc=init_alloc)
-        self.last_outcomes = outs
+                                init_alloc=init_alloc,
+                                gd_chunk=self.gd_chunk, mesh=self.mesh)
+        self.last_outcomes = list(outs)
         return [build_schedule(scn, out)
                 for scn, out in zip(self.scns, outs)]
+
+    def _schedule_subset(self, q, cells: List[int], *, warm: bool,
+                         init_alloc=None) -> List[Schedule]:
+        if not cells:
+            return []
+        if sorted(set(cells)) != sorted(cells) or \
+                not all(0 <= c < self.n_cells for c in cells):
+            raise ValueError(f"cells must be distinct indices in "
+                             f"[0, {self.n_cells}), got {cells}")
+        # q is ALWAYS the full (B, U) matrix, indexed by `cells` here — a
+        # subset-aligned q would gather the wrong rows silently (jax clamps
+        # out-of-bounds gathers), so reject it loudly
+        if q.ndim != 2 or q.shape[0] != self.n_cells:
+            raise ValueError(f"q must be the full (B={self.n_cells}, U) "
+                             f"threshold matrix, got {q.shape}")
+        k = len(cells)
+        n = bucket_for(k, self.n_cells)
+        lanes = cells + [cells[-1]] * (n - k)      # pad: repeat last cell
+        prep = self._prep_subset(lanes)
+        q_sub = q[jnp.asarray(lanes)]
+        if init_alloc is None and warm:
+            init_alloc = self._warm_init(lanes)
+        outs = ligd.solve_batch(None, None, q_sub, self.weights,
+                                per_user_split=self.per_user_split,
+                                max_steps=self.max_steps, lr=self.lr,
+                                tol=self.tol, prep=prep,
+                                init_alloc=init_alloc,
+                                gd_chunk=self.gd_chunk, mesh=self.mesh)
+        if not self.last_outcomes:
+            self.last_outcomes = [None] * self.n_cells
+        for j, c in enumerate(cells):              # real lanes only
+            self.last_outcomes[c] = outs[j]
+        return [build_schedule(self.scns[c], outs[j])
+                for j, c in enumerate(cells)]

@@ -175,14 +175,150 @@ def test_admission_round_warm_starts_from_previous_solve(monkeypatch):
 
     def spy(*args, **kw):
         seen["init_alloc"] = kw.get("init_alloc")
+        seen["q"] = np.asarray(args[2])
         return orig(*args, **kw)
 
     monkeypatch.setattr(ligd, "solve_batch", spy)
     ctl.submit(0, 0, 0.12)
     ctl.step()
     assert seen["init_alloc"] is not None
-    # seeded from the previous round's solved allocations (leading B axis)
+    # partial round: one touched cell -> a 1-lane bucket, seeded from THAT
+    # cell's previous solved allocation (not the full-B stack)
+    assert seen["init_alloc"].p.shape[0] == 1
+    assert seen["q"].shape[0] == 1
+    prev = ctl.scheduler.last_outcomes[0]
+    assert prev is not None
+
+
+def test_full_batch_mode_still_solves_every_cell(monkeypatch):
+    """partial_batch=False restores the round-invariant full-B solve."""
+    engine, ctl, clock, _ = _make()
+    ctl.partial_batch = False
+    ctl.bootstrap(_q0(ctl))
+
+    seen = {}
+    orig = ligd.solve_batch
+
+    def spy(*args, **kw):
+        seen["q"] = np.asarray(args[2])
+        seen["init_alloc"] = kw.get("init_alloc")
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(ligd, "solve_batch", spy)
+    ctl.submit(0, 0, 0.12)
+    rnd = ctl.step()
+    assert rnd.cells == (0,)
+    assert seen["q"].shape[0] == ctl.n_cells
     assert seen["init_alloc"].p.shape[0] == ctl.n_cells
+
+
+# -------------------------------------------------------- partial rounds
+def test_partial_round_solves_only_touched_lanes(monkeypatch):
+    """A 1-dirty-cell round must dispatch a 1-lane bucket solve, swap only
+    that cell, and leave the other cells' warm-start state untouched."""
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    before = engine.current_schedules()
+    warm_before = list(ctl.scheduler.last_outcomes)
+
+    seen = {}
+    orig = ligd.solve_batch
+
+    def spy(*args, **kw):
+        seen["q"] = np.asarray(args[2])
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(ligd, "solve_batch", spy)
+    ctl.submit(1, 3, 0.08)
+    rnd = ctl.step()
+    assert rnd.cells == (1,)
+    assert seen["q"].shape[0] == 1               # bucket of 1, not B=2
+    after = engine.current_schedules()
+    assert after.schedules[0] is before.schedules[0]
+    assert after.schedules[1] is not before.schedules[1]
+    assert ctl.scheduler.last_outcomes[0] is warm_before[0]
+    assert ctl.scheduler.last_outcomes[1] is not warm_before[1]
+    # round cost reflects the solved lanes only
+    assert rnd.total_iters == after.schedules[1].iters
+
+
+def test_partial_round_schedule_matches_full_solve():
+    """The bucketed 1-lane solve must install the same schedule a full-B
+    round would have (lane independence end to end)."""
+    engine, ctl, clock, scns = _make(warm_start=False)
+    ctl.bootstrap(_q0(ctl))
+    heavy = network.evolve_scenario(scns[0], jax.random.PRNGKey(7), rho=0.3)
+    ctl.observe_scenario(0, heavy)
+    ctl.step()
+    got = engine.current_schedules().schedules[0]
+
+    engine2, ctl2, _, _ = _make(warm_start=False)
+    ctl2.partial_batch = False
+    ctl2.bootstrap(_q0(ctl2))
+    ctl2.observe_scenario(0, heavy)
+    ctl2.step()
+    want = engine2.current_schedules().schedules[0]
+    np.testing.assert_array_equal(got.split, want.split)
+    np.testing.assert_allclose(got.uplink_rate, want.uplink_rate, rtol=1e-5)
+    np.testing.assert_allclose(got.power_up, want.power_up, rtol=1e-6)
+
+
+# ------------------------------------------------------------- QoE aging
+def _aging_ctl(half_life=10.0, cap=None):
+    engine, ctl, clock, scns = _make()
+    ctl.qoe_half_life_s = half_life
+    ctl.q_age_cap = cap
+    ctl.bootstrap(_q0(ctl))
+    return engine, ctl, clock, scns
+
+
+def test_aged_thresholds_double_per_half_life(monkeypatch):
+    engine, ctl, clock, _ = _aging_ctl(half_life=10.0)
+    seen = {}
+    orig = ctl.scheduler.schedule
+
+    def spy(q, **kw):
+        seen["q"] = np.asarray(q).copy()
+        return orig(q, **kw)
+
+    monkeypatch.setattr(ctl.scheduler, "schedule", spy)
+    clock.advance(20.0)                          # two half-lives idle
+    ctl.submit(0, 1, 0.1)                        # fresh post at t=20
+    ctl.step()
+    q = seen["q"]
+    # the fresh arrival is un-aged; every idle user aged 2 half-lives = 4x
+    assert q[0, 1] == pytest.approx(0.1)
+    assert q[0, 0] == pytest.approx(0.4 * 4.0)
+    assert q[1, 5] == pytest.approx(0.4 * 4.0)
+    # posted values are preserved — aging never rewrites state
+    posted = ctl.current_q()
+    assert posted[0, 0] == np.float32(0.4)
+    assert posted[0, 1] == np.float32(0.1)
+
+
+def test_aged_thresholds_cap():
+    engine, ctl, clock, _ = _aging_ctl(half_life=1.0, cap=0.9)
+    clock.advance(50.0)                          # would be 0.4 * 2^50
+    eff = ctl.effective_q()
+    np.testing.assert_allclose(eff, 0.9)
+
+
+def test_aging_disabled_is_identity():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    clock.advance(1e6)
+    np.testing.assert_array_equal(ctl.effective_q(), ctl.current_q())
+
+
+def test_age_thresholds_pure_function():
+    from repro.serving.admission import age_thresholds
+    q = np.array([[0.1, 0.2]], np.float32)
+    t = np.array([[0.0, 10.0]])
+    aged = age_thresholds(q, t, now=10.0, half_life_s=10.0)
+    np.testing.assert_allclose(aged, [[0.2, 0.2]], rtol=1e-6)
+    # never tightens (negative age clamps to zero)
+    aged = age_thresholds(q, t, now=0.0, half_life_s=10.0)
+    np.testing.assert_allclose(aged, q)
 
 
 # ------------------------------------------------------------------ swaps
@@ -264,6 +400,26 @@ def test_stop_without_drain_discards_pending():
 
 
 # ------------------------------------------------------------- robustness
+def test_submit_requires_bootstrap():
+    """Pre-bootstrap the user axis is unknown, so arrivals cannot be
+    bounds-checked — they must be rejected in the producer thread, not
+    explode inside the solver loop later."""
+    engine, ctl, clock, _ = _make()
+    with pytest.raises(RuntimeError):
+        ctl.submit(0, 0, 0.1)
+    assert len(ctl.queue) == 0
+
+
+def test_swap_schedules_validates_cell_keys():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    sched = engine.current_schedules().schedules[0]
+    with pytest.raises(ValueError):
+        engine.swap_schedules({-1: sched})   # would alias the last cell
+    with pytest.raises(ValueError):
+        engine.swap_schedules({5: sched})
+
+
 def test_submit_and_observe_validate_cell_and_user_bounds():
     engine, ctl, clock, scns = _make()
     ctl.bootstrap(_q0(ctl))
