@@ -4,10 +4,12 @@
 # execution + async admission loop).  `make test-solver` groups the solver
 # suites (ligd core / batched sweep / sharded SPMD) and forces 4 host
 # devices so the shard_map multi-device paths are exercised on CPU-only CI.
+# `make test-cluster` runs the unified cluster API suite (SolverSpec +
+# SplitInferenceCluster churn lifecycle).
 PY := PYTHONPATH=src python
 SOLVER_DEVICES := XLA_FLAGS="--xla_force_host_platform_device_count=4"
 
-.PHONY: test test-fast test-serving test-solver bench bench-quick
+.PHONY: test test-fast test-serving test-solver test-cluster bench bench-quick
 
 test:
 	$(PY) -m pytest -q
@@ -21,6 +23,11 @@ test-serving:
 test-solver:
 	$(SOLVER_DEVICES) $(PY) -m pytest -q tests/test_ligd_batched.py \
 		tests/test_sharded_solver.py tests/test_era_core.py
+
+# unified cluster API: SolverSpec deprecation shims + cell-churn lifecycle
+test-cluster:
+	$(PY) -m pytest -q -m cluster tests/test_solver_spec.py \
+		tests/test_cluster.py
 
 bench:
 	$(PY) -m benchmarks.run

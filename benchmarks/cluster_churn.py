@@ -1,0 +1,110 @@
+"""Cell-churn cost: coordinated add/remove through the cluster facade vs
+the pre-facade full restack+resolve.
+
+The zero-downtime churn path (``SplitInferenceCluster.add_cell`` /
+``remove_cell``) remaps the stacked prep (survivors gathered device-side),
+solves ONLY the joining lane (a 1-lane bucket) or nothing at all (leave),
+and carries surviving cells' installed schedules over in one versioned
+swap.  The baseline it replaces rebuilt the scheduler prep for all B cells
+and re-solved the full batch before reinstalling.
+
+Headline (acceptance criterion): a k-cell churn round must be STRICTLY
+cheaper than a full B-cell restack+resolve.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, scenario, timed
+from repro.core import ligd, profiles
+from repro.core.ligd import SolverSpec
+from repro.serving.cluster import SplitInferenceCluster
+
+B = 6
+USERS = 10
+SUBCH = 5
+MAX_STEPS = 120
+
+
+def _mk_scn(seed):
+    return scenario(seed=seed, n_users=USERS, n_subchannels=SUBCH)
+
+
+def _mk_cluster():
+    spec = SolverSpec(backend="reference", max_steps=MAX_STEPS,
+                      per_user_split=False)
+    prof = profiles.get_profile("nin")
+    cl = SplitInferenceCluster(None, None, prof, spec=spec, default_q_s=0.4)
+    for s in range(B):
+        cl.add_cell(_mk_scn(s))
+    cl.start(threaded=False)
+    return cl
+
+
+def _full_restack_resolve(cl, scn_new):
+    """The pre-facade churn stopgap: rebuild the stacked prep for the new
+    cell list, re-solve ALL lanes, reinstall everything."""
+    sched = cl.scheduler
+    scns = list(sched.scns[1:]) + [scn_new]      # drop lane 0, append new
+    sched.resize(scns, keep={i: i + 1 for i in range(B - 1)})
+    # defeat the identity-gather fast path the facade uses: the stopgap
+    # restacked from per-cell scenarios on the host every time
+    sched.prep = ligd.prepare_batch(scns, sched.prof, sched.spec.warm_start)
+    q = np.full((B, USERS), 0.4, np.float32)
+    scheds = sched.schedule(q, warm=True)
+    cl.engine.resize(scns, scheds)
+    return scheds
+
+
+def run(quick: bool = False):
+    reps = 3 if quick else 8
+
+    # ---- churn round cost through the facade ---------------------------
+    cl = _mk_cluster()
+    # warm every compiled shape churn touches: 1-lane bucket + B-lane batch
+    wid = cl.add_cell(_mk_scn(100))
+    cl.remove_cell(wid)
+
+    add_us, rem_us, seed = [], [], 200
+    ids = list(cl.cell_ids())
+    for r in range(reps):
+        t0 = time.perf_counter()
+        cid = cl.add_cell(_mk_scn(seed + r))
+        add_us.append((time.perf_counter() - t0) * 1e6)
+        ids.append(cid)
+        victim = ids.pop(0)
+        t0 = time.perf_counter()
+        cl.remove_cell(victim)
+        rem_us.append((time.perf_counter() - t0) * 1e6)
+    add_med = float(np.median(add_us))
+    rem_med = float(np.median(rem_us))
+    emit("cluster.add_cell_us", add_med, f"B={B}->+1 lane solved")
+    emit("cluster.remove_cell_us", rem_med, "no solve, remap only")
+    cl.stop()
+
+    # ---- baseline: full restack + full-B resolve -----------------------
+    cl = _mk_cluster()
+    _full_restack_resolve(cl, _mk_scn(300))      # warm the full-B shape
+    full_us = []
+    for r in range(reps):
+        _, us = timed(_full_restack_resolve, cl, _mk_scn(400 + r))
+        full_us.append(us)
+    full_med = float(np.median(full_us))
+    emit("cluster.full_restack_resolve_us", full_med,
+         f"all {B} lanes re-solved")
+    cl.stop()
+
+    emit("cluster.add_vs_full_speedup", 0.0,
+         f"{full_med / add_med:.2f}x")
+    emit("cluster.remove_vs_full_speedup", 0.0,
+         f"{full_med / rem_med:.2f}x")
+    assert add_med < full_med, (
+        f"churn add round ({add_med:.0f}us) must beat the full "
+        f"restack+resolve ({full_med:.0f}us)")
+    assert rem_med < full_med
+
+
+if __name__ == "__main__":
+    run()

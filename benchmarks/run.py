@@ -30,6 +30,7 @@ MODULES = [
     ("multipod", "benchmarks.multipod_scaling"),
     ("online", "benchmarks.online_rescheduling"),
     ("admission", "benchmarks.async_admission"),
+    ("cluster", "benchmarks.cluster_churn"),
 ]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

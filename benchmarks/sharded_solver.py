@@ -7,7 +7,8 @@
      (``MultiCellScheduler.schedule(cells=...)``) vs the full-B solve it
      replaces;
   3. multi-device scaling: B cells sharded over a ``cells`` mesh
-     (``solve_batch(mesh=...)``) vs the single-device vmapped solve.  When
+     (``SolverSpec(backend="sharded")``) vs the single-device vmapped
+     solve.  When
      the process only sees one device (the default CPU run), this part
      re-runs itself in a subprocess with
      ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` and re-emits
@@ -66,14 +67,15 @@ def _chunked_vs_while(cfg, prof, qs, reps, quick):
     for tag, kw_cells in (("uniform", dict(uniform=True)),
                           ("skewed", dict(skew=True))):
         scns = _cells(cfg, b, **kw_cells)
-        kw = dict(max_steps=150 if quick else 400, per_user_split=False)
-        ligd.solve_batch(scns, prof, qs, **kw)                   # warm
-        ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK, **kw)
+        ref = ligd.SolverSpec(max_steps=150 if quick else 400,
+                              per_user_split=False)
+        chunk = ref.replace(backend="chunked", gd_chunk=GD_CHUNK)
+        ligd.solve_batch(scns, prof, qs, spec=ref)               # warm
+        ligd.solve_batch(scns, prof, qs, spec=chunk)
         us_while = _median_time(
-            lambda: ligd.solve_batch(scns, prof, qs, **kw), reps)
+            lambda: ligd.solve_batch(scns, prof, qs, spec=ref), reps)
         us_chunk = _median_time(
-            lambda: ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK,
-                                     **kw), reps)
+            lambda: ligd.solve_batch(scns, prof, qs, spec=chunk), reps)
         emit(f"sharded.gd_while_us.{tag}", us_while, "")
         emit(f"sharded.gd_chunk{GD_CHUNK}_us.{tag}", us_chunk, "")
         emit(f"sharded.gd_chunk_speedup.{tag}", 0.0,
@@ -113,19 +115,21 @@ def _device_scaling(cfg, prof, qs, reps, quick):
     scns = _cells(cfg, b, skew=True)   # skew: lockstep-free sharding shines
     n_dev = min(SCALING_DEVICES, len(jax.devices()))
     mesh = solver_mesh.cells_mesh(n_dev)
-    kw = dict(max_steps=150 if quick else 400, per_user_split=False)
+    ref = ligd.SolverSpec(max_steps=150 if quick else 400,
+                          per_user_split=False)
+    chunk = ref.replace(backend="chunked", gd_chunk=GD_CHUNK)
+    sharded = ref.replace(backend="sharded", mesh=mesh,
+                          gd_chunk=GD_CHUNK)
 
-    ligd.solve_batch(scns, prof, qs, **kw)                       # warm
-    ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK, **kw)
-    ligd.solve_batch(scns, prof, qs, mesh=mesh, gd_chunk=GD_CHUNK, **kw)
+    ligd.solve_batch(scns, prof, qs, spec=ref)                   # warm
+    ligd.solve_batch(scns, prof, qs, spec=chunk)
+    ligd.solve_batch(scns, prof, qs, spec=sharded)
     us_single = _median_time(
-        lambda: ligd.solve_batch(scns, prof, qs, **kw), reps)
+        lambda: ligd.solve_batch(scns, prof, qs, spec=ref), reps)
     us_single_chunk = _median_time(
-        lambda: ligd.solve_batch(scns, prof, qs, gd_chunk=GD_CHUNK, **kw),
-        reps)
+        lambda: ligd.solve_batch(scns, prof, qs, spec=chunk), reps)
     us_mesh = _median_time(
-        lambda: ligd.solve_batch(scns, prof, qs, mesh=mesh,
-                                 gd_chunk=GD_CHUNK, **kw), reps)
+        lambda: ligd.solve_batch(scns, prof, qs, spec=sharded), reps)
     emit(f"sharded.cells{b}_1dev_us", us_single, "")
     emit(f"sharded.cells{b}_1dev_chunk{GD_CHUNK}_us", us_single_chunk, "")
     emit(f"sharded.cells{b}_{n_dev}dev_us", us_mesh, "")

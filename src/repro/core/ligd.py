@@ -42,24 +42,45 @@ the reference's (Corollary-4 plots unchanged) while wasted work is
 bounded by ``k-1`` steps per lane, and under the cells mesh each device
 exits on its own lanes instead of the global slowest cell.
 
-Static vs traced argument split (applies to ``_sweep_scan``, the chunked
-sweep, the ``solver_mesh`` sharded sweep, and everything above them):
-  static  — ``max_steps``, ``Weights`` (hashable frozen dataclass),
-            ``adaptive``, ``gd_chunk`` (loop structure), the scenario's
-            ``NetworkConfig`` (pytree aux), the profile's layer count F
-            (leaf shapes), the padded batch size B (bucketed admission
-            maps dirty-cell counts onto a small ladder of these so each
-            bucket compiles once), and the ``Mesh`` handed to the sharded
-            path (device set + axis name).  Changing any of these
-            recompiles.
+How a solve runs is described by ONE object, the frozen ``SolverSpec``
+(``solve``/``solve_batch`` take ``spec=``; the pre-spec kwarg sprawl —
+``compiled_sweep``/``gd_chunk``/``mesh`` — still works through a
+deprecation shim that maps onto the equivalent spec).  Its ``backend``
+picks the sweep engine:
+  ``reference`` — vmapped while_loop GD on one device (the bit-exact
+                  baseline every other backend is regression-tested
+                  against);
+  ``chunked``   — ``gd_chunk``-step partially-unrolled scans with
+                  per-lane carry freeze (lockstep-free, iterates
+                  identical to reference);
+  ``sharded``   — the chunked-or-while sweep under ``shard_map`` over a
+                  ``cells`` device mesh (``spec.mesh``, default: all
+                  visible devices).
+
+Static vs traced argument split, in ``SolverSpec`` terms (applies to
+``_sweep_scan``, the chunked sweep, the ``solver_mesh`` sharded sweep, and
+everything above them):
+  static  — ``spec.max_steps``, ``spec.adaptive``, ``spec.gd_chunk``
+            (loop structure), ``spec.mesh`` (device set + axis name,
+            ``sharded`` backend only), ``Weights`` (hashable frozen
+            dataclass), the scenario's ``NetworkConfig`` (pytree aux),
+            the profile's layer count F (leaf shapes), and the padded
+            batch size B (``spec.bucket`` maps dirty-cell counts onto a
+            small ladder of these so each bucket compiles once).
+            Changing any of these recompiles — which is why they live in
+            the frozen spec: one spec == one family of compiled programs.
   traced  — channel state (``Scenario`` leaves), the per-cell numeric
             network parameters (the ``CellEnv`` leaf — power/compute
             bounds, noise floor, bandwidth …, so heterogeneous-config
             batches vmap per lane), profile FLOP/bit tables
             (``SplitProfile`` leaves, incl. ``input_bits``/``result_bits``),
-            QoE thresholds ``q``, ``lr``/``tol``, the warm-start predecessor
-            index vector, and the initial allocation.  These can change
-            every admission round without recompiling.
+            QoE thresholds ``q``, ``spec.lr``/``spec.tol``, the warm-start
+            predecessor index vector, and the initial allocation.  These
+            can change every admission round without recompiling.
+  host    — ``spec.warm_start`` (predecessor-graph precompute),
+            ``spec.warm`` (cross-round warm seeding policy, consumed by
+            the serving layer), ``spec.bucket``/``spec.per_user_split``/
+            ``spec.compiled_sweep`` (host-side dispatch structure).
 
 Beyond-paper extension (``per_user_split=True``, "ERA+"): the paper commits
 one global s*; ERA+ reuses the F+1 solved GD problems to pick per-user
@@ -68,8 +89,11 @@ allocation with the mixed split vector.  Recorded separately in benchmarks.
 """
 from __future__ import annotations
 
+import warnings
+from dataclasses import dataclass
+from dataclasses import replace as _dc_replace
 from functools import partial
-from typing import List, NamedTuple
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +102,161 @@ import numpy as np
 from repro.core import network, noma, profiles
 from repro.core.era import (Allocation, Terms, Weights, clip_alloc,
                             round_beta, uniform_alloc, utility)
+
+_BACKENDS = ("reference", "chunked", "sharded")
+_BUCKETS = ("pow2", "exact", "full")
+
+# gd_chunk a `backend="chunked"` spec defaults to when none is given —
+# long enough that XLA fuses across GD steps, short enough that wasted
+# selected-away work per lane stays small (benchmarks/sharded_solver.py)
+DEFAULT_GD_CHUNK = 8
+
+
+@dataclass(frozen=True)
+class SolverSpec:
+    """Frozen, validated description of HOW a Li-GD solve runs.
+
+    One spec == one family of compiled programs: every field is either a
+    jit-static of the sweep (backend/gd_chunk/mesh/max_steps/adaptive), a
+    traced scalar threaded into it (lr/tol), or a host-side dispatch
+    policy (warm_start/warm/bucket/per_user_split/compiled_sweep).  The
+    serving stack (``MultiCellScheduler``, ``SplitInferenceCluster``)
+    stores exactly one spec and threads it everywhere a solve happens —
+    replacing the per-call kwarg sprawl the pre-spec API grew.
+
+    Fields:
+      backend         'reference' | 'chunked' | 'sharded' (module docs).
+      gd_chunk        inner-GD scan segment length.  0 on 'reference'
+                      (enforced); 'chunked' defaults it to
+                      ``DEFAULT_GD_CHUNK`` when left at 0; 'sharded'
+                      composes with either (0 = while_loop per shard).
+      lr / tol /
+      max_steps       the GD knobs of Table I (step size, stop test,
+                      iteration budget).
+      warm_start      Table I's nearest-w predecessor warm start inside
+                      one sweep (False = the cold-start GD baseline).
+      warm            cross-ROUND warm start: serving re-solves seed from
+                      the previous round's solved allocations
+                      (``warm_start_from``).  Consumed by the serving
+                      layer, not by a single ``solve_batch`` call.
+      per_user_split  ERA+ per-user split pick + polish (beyond paper).
+      adaptive        backtracking step-size control (beyond paper).
+      compiled_sweep  False = the seed-structured per-layer Python loop
+                      (single-cell reference path; 'reference' backend
+                      only).
+      bucket          partial-round padding policy for dirty-cell subsets:
+                      'pow2' (1/2/4/…/B ladder, O(log B) compiled
+                      variants), 'exact' (no padding, one compile per
+                      subset size), 'full' (always solve all B lanes).
+      mesh            explicit ``jax.Mesh`` for 'sharded' (None = build a
+                      ``cells`` mesh over every visible device at use).
+    """
+    backend: str = "reference"
+    gd_chunk: int = 0
+    lr: float = 0.05
+    tol: float = 1e-5
+    max_steps: int = 400
+    warm_start: bool = True
+    warm: bool = True
+    per_user_split: bool = False
+    adaptive: bool = False
+    compiled_sweep: bool = True
+    bucket: str = "pow2"
+    mesh: Optional[object] = None          # jax.sharding.Mesh (hashable)
+
+    def __post_init__(self):
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.bucket not in _BUCKETS:
+            raise ValueError(f"bucket must be one of {_BUCKETS}, "
+                             f"got {self.bucket!r}")
+        if self.gd_chunk < 0:
+            raise ValueError(f"gd_chunk must be >= 0, got {self.gd_chunk}")
+        if self.backend == "chunked" and self.gd_chunk == 0:
+            object.__setattr__(self, "gd_chunk", DEFAULT_GD_CHUNK)
+        if self.backend == "reference" and self.gd_chunk:
+            raise ValueError("backend='reference' runs the while_loop GD; "
+                             "use backend='chunked' for gd_chunk>0")
+        if self.mesh is not None and self.backend != "sharded":
+            raise ValueError("mesh= only applies to backend='sharded'")
+        if not self.compiled_sweep and self.backend != "reference":
+            raise ValueError("compiled_sweep=False (per-layer reference "
+                             "loop) only composes with backend='reference'")
+        if not self.lr > 0:
+            raise ValueError(f"lr must be > 0, got {self.lr}")
+        if self.tol < 0:
+            raise ValueError(f"tol must be >= 0, got {self.tol}")
+        if self.max_steps < 1:
+            raise ValueError(f"max_steps must be >= 1, got {self.max_steps}")
+
+    def replace(self, **kw) -> "SolverSpec":
+        """Functional update (re-validated)."""
+        return _dc_replace(self, **kw)
+
+    def run_mesh(self):
+        """The mesh a ``sharded`` solve runs on (None for other backends);
+        an unset mesh resolves to a ``cells`` mesh over every visible
+        device.  ``solver_mesh.cells_mesh`` caches the all-devices default,
+        so repeated resolution returns the identical Mesh object and the
+        sharded sweep's jit cache keys stay stable."""
+        if self.backend != "sharded":
+            return None
+        if self.mesh is not None:
+            return self.mesh
+        from repro.distributed import solver_mesh
+        return solver_mesh.cells_mesh()
+
+
+class _Unset:
+    def __repr__(self):
+        return "<unset>"
+
+
+_UNSET = _Unset()
+
+# legacy kwargs that warn (the ISSUE-era sprawl SolverSpec replaces);
+# plain numeric knobs (lr/tol/max_steps/...) fold into the spec silently
+_SPEC_DEPRECATED = ("compiled_sweep", "gd_chunk", "mesh")
+# passing a deprecated kwarg at its no-op value is vacuous — fold it
+# without warning (and without conflicting with an explicit spec=)
+_VACUOUS = {"compiled_sweep": True, "gd_chunk": 0, "mesh": None}
+
+
+def spec_from_kwargs(**kw) -> SolverSpec:
+    """Map the legacy kwarg sprawl onto a ``SolverSpec``: ``mesh`` selects
+    the sharded backend, else ``gd_chunk>0`` selects chunked, else
+    reference.  Shared by the ``solve``/``solve_batch`` deprecation shims
+    and the serving constructors' legacy signatures."""
+    gd_chunk = int(kw.pop("gd_chunk", 0) or 0)
+    mesh = kw.pop("mesh", None)
+    if mesh is not None:
+        kw.update(backend="sharded", mesh=mesh, gd_chunk=gd_chunk)
+    elif gd_chunk:
+        kw.update(backend="chunked", gd_chunk=gd_chunk)
+    return SolverSpec(**kw)
+
+
+def _resolve_spec(spec: Optional[SolverSpec], where: str,
+                  **legacy) -> SolverSpec:
+    """Either take the explicit ``spec=`` or build one from legacy kwargs.
+    Mixing the two is rejected; deprecated structural kwargs
+    (``compiled_sweep``/``gd_chunk``/``mesh``) warn."""
+    passed = {k: v for k, v in legacy.items()
+              if v is not _UNSET and _VACUOUS.get(k, _UNSET) != v}
+    if spec is not None:
+        if passed:
+            raise ValueError(
+                f"{where}: pass either spec= or the legacy kwargs "
+                f"{sorted(passed)}, not both")
+        return spec
+    dep = sorted(k for k in passed if k in _SPEC_DEPRECATED)
+    if dep:
+        warnings.warn(
+            f"{where}({', '.join(dep)}=...) is deprecated; build a "
+            "SolverSpec and pass spec= (README.md has the migration "
+            "table)", DeprecationWarning, stacklevel=3)
+    return spec_from_kwargs(**passed)
 
 
 class GDResult(NamedTuple):
@@ -418,43 +597,51 @@ def _finalize(scn, prof, q, w, stacked, gammas_np, iters_np, *, lr, tol,
     )
 
 
-def solve(scn, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
-          max_steps=400, warm_start=True, per_user_split=False,
-          init_alloc: Allocation = None, adaptive=False,
-          key=None, compiled_sweep=True, gd_chunk=0) -> LiGDOutcome:
-    """Run Li-GD (warm_start=True) or the paper's cold-start GD baseline
-    (warm_start=False) over every candidate split point.
+def solve(scn, prof, q, w: Weights = Weights(), *, spec: SolverSpec = None,
+          lr=_UNSET, tol=_UNSET, max_steps=_UNSET, warm_start=_UNSET,
+          per_user_split=_UNSET, init_alloc: Allocation = None,
+          adaptive=_UNSET, key=None, compiled_sweep=_UNSET,
+          gd_chunk=_UNSET) -> LiGDOutcome:
+    """Run Li-GD (``spec.warm_start=True``) or the paper's cold-start GD
+    baseline over every candidate split point, as described by ``spec``
+    (``SolverSpec``; the default spec is the scanned-sweep reference
+    backend).
 
-    ``compiled_sweep=True`` (default) runs the F+1 sweep as one scanned
-    program (see module docstring); ``False`` keeps the per-layer Python
-    loop — one jitted solve per split with a host sync in between — as the
-    reference implementation the compiled path is tested against.
+    Legacy kwargs (``lr``/``tol``/… and the deprecated structural trio
+    ``compiled_sweep``/``gd_chunk``) still work and are folded onto the
+    equivalent spec — bitwise-identical results, since both routes run the
+    same compiled programs.  Mixing ``spec=`` with legacy kwargs raises.
 
     ``init_alloc`` (beyond paper, "online ERA"): seed layer 1's GD from a
     previous time step's solution instead of the uninformed start — the
     loop-iteration warm-start idea extended across time, for re-scheduling
-    under channel drift (network.evolve_scenario).
-
-    ``gd_chunk``: 0 = per-lane ``while_loop`` reference; k>0 = the
-    lockstep-mitigating chunked scan (see ``_gd_core``) — iterates match
-    the reference, only the loop structure changes."""
+    under channel drift (network.evolve_scenario)."""
+    spec = _resolve_spec(spec, "ligd.solve", lr=lr, tol=tol,
+                         max_steps=max_steps, warm_start=warm_start,
+                         per_user_split=per_user_split, adaptive=adaptive,
+                         compiled_sweep=compiled_sweep, gd_chunk=gd_chunk)
+    if spec.backend == "sharded":
+        raise ValueError("backend='sharded' shards a CELL axis — use "
+                         "solve_batch (single-cell solve has no cell axis)")
     x_init = (soften_beta(scn, init_alloc) if init_alloc is not None
               else uniform_alloc(scn, rng=key))
 
-    if not compiled_sweep:
-        return _solve_sequential(scn, prof, q, w, lr=lr, tol=tol,
-                                 max_steps=max_steps, warm_start=warm_start,
-                                 per_user_split=per_user_split,
-                                 adaptive=adaptive, x_init=x_init)
+    if not spec.compiled_sweep:
+        return _solve_sequential(scn, prof, q, w, lr=spec.lr, tol=spec.tol,
+                                 max_steps=spec.max_steps,
+                                 warm_start=spec.warm_start,
+                                 per_user_split=spec.per_user_split,
+                                 adaptive=spec.adaptive, x_init=x_init)
 
-    pred = warm_start_predecessors(prof.uplink_bits, warm_start)
-    swept = _sweep_scan(scn, q, x_init, jnp.asarray(pred), lr, tol,
-                        max_steps, w, prof, adaptive=adaptive,
-                        gd_chunk=gd_chunk)
+    pred = warm_start_predecessors(prof.uplink_bits, spec.warm_start)
+    swept = _sweep_scan(scn, q, x_init, jnp.asarray(pred), spec.lr, spec.tol,
+                        spec.max_steps, w, prof, adaptive=spec.adaptive,
+                        gd_chunk=spec.gd_chunk)
     return _finalize(scn, prof, q, w, swept.alloc,
                      np.asarray(swept.gamma), np.asarray(swept.iters),
-                     lr=lr, tol=tol, max_steps=max_steps, adaptive=adaptive,
-                     per_user_split=per_user_split)
+                     lr=spec.lr, tol=spec.tol, max_steps=spec.max_steps,
+                     adaptive=spec.adaptive,
+                     per_user_split=spec.per_user_split)
 
 
 def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
@@ -563,12 +750,28 @@ def prepare_batch(scns, prof, warm_start: bool = True) -> BatchPrep:
                      pred_b, hetero)
 
 
-def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
-                max_steps=400, warm_start=True, per_user_split=False,
-                adaptive=False, prep: BatchPrep = None,
-                init_alloc: Allocation = None, gd_chunk=0,
-                mesh=None) -> List[LiGDOutcome]:
-    """Schedule B independent cells with ONE compiled, vmapped sweep.
+def solve_batch(scns, prof, q, w: Weights = Weights(), *,
+                spec: SolverSpec = None, lr=_UNSET, tol=_UNSET,
+                max_steps=_UNSET, warm_start=_UNSET, per_user_split=_UNSET,
+                adaptive=_UNSET, prep: BatchPrep = None,
+                init_alloc: Allocation = None, gd_chunk=_UNSET,
+                mesh=_UNSET, compiled_sweep=_UNSET) -> List[LiGDOutcome]:
+    """Schedule B independent cells with ONE compiled, vmapped sweep, as
+    described by ``spec`` (``SolverSpec``):
+
+      backend='reference'  one device, vmapped while_loop GD;
+      backend='chunked'    one device, lockstep-free chunked GD;
+      backend='sharded'    the sweep under ``shard_map`` over
+                           ``spec.run_mesh()``'s ``cells`` axis — one SPMD
+                           program, no cross-lane collectives until the
+                           final output gather; lanes are padded
+                           (repeat-last) to a multiple of the mesh size
+                           and padding outcomes dropped.
+
+    Legacy kwargs (``gd_chunk=``/``mesh=``/``compiled_sweep=`` plus the
+    numeric knobs) still work through a deprecation shim that folds them
+    onto the equivalent spec — bitwise-identical results, same compiled
+    programs.  Mixing ``spec=`` with legacy kwargs raises.
 
     Arguments:
       scns: a list/tuple of ``Scenario``s with structurally compatible
@@ -580,13 +783,13 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
         e.g. the same architecture profiled at different request lengths).
       q: (B, U) per-cell QoE thresholds.
 
-    The GD sweep for all B cells runs in a single ``_sweep_batch`` call;
-    only the cheap discretisation (β rounding, SIC fallback) happens
-    per-cell on the host.  Returns one ``LiGDOutcome`` per cell.
+    The GD sweep for all B cells runs in a single compiled call; only the
+    cheap discretisation (β rounding, SIC fallback) happens per-cell on
+    the host.  Returns one ``LiGDOutcome`` per cell.
 
     ``prep``: pass a ``prepare_batch`` result to skip re-deriving the
     round-invariant stacked inputs on every call (``scns``/``prof``/
-    ``warm_start`` are then ignored in its favour).
+    ``spec.warm_start`` are then ignored in its favour).
 
     ``init_alloc`` (warm-start entry point, online ERA across rounds): a
     batched Allocation with leading axis B — typically
@@ -594,19 +797,19 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     Allocations.  Hard one-hot β rows are softened back into the simplex
     interior (``soften_beta``) before seeding layer 0's GD, exactly as the
     single-cell ``solve(init_alloc=...)`` path does.
-
-    ``gd_chunk``: 0 = while_loop reference GD; k>0 = chunked lockstep-free
-    GD (see ``_gd_core``).
-
-    ``mesh``: a 1-D ``jax.Mesh`` over a ``cells`` axis
-    (``distributed.solver_mesh.cells_mesh``) shards the sweep's cell axis
-    across devices via ``shard_map`` — one SPMD program, no cross-lane
-    collectives in the sweep body, only the final output gather.  Lanes
-    are padded (by repeating the last cell) up to a multiple of the mesh
-    size; padding outcomes are dropped before returning.
     """
+    spec = _resolve_spec(spec, "ligd.solve_batch", lr=lr, tol=tol,
+                         max_steps=max_steps, warm_start=warm_start,
+                         per_user_split=per_user_split, adaptive=adaptive,
+                         gd_chunk=gd_chunk, mesh=mesh,
+                         compiled_sweep=compiled_sweep)
+    if not spec.compiled_sweep:
+        raise ValueError(
+            "compiled_sweep=False is the per-layer sequential reference "
+            "loop, a single-cell path — use ligd.solve; solve_batch "
+            "always runs the scanned sweep")
     if prep is None:
-        prep = prepare_batch(scns, prof, warm_start)
+        prep = prepare_batch(scns, prof, spec.warm_start)
     scn_b, scn_list = prep.scn_b, prep.scn_list
     prof_b, prof_list = prep.prof_b, prep.prof_list
     prof_batched, pred_b = prep.prof_batched, prep.pred_b
@@ -636,16 +839,19 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     f = prof_list[0].n_layers
     u = q.shape[1]
 
-    if mesh is not None:
+    run_mesh = spec.run_mesh()
+    if run_mesh is not None:
         from repro.distributed import solver_mesh
         swept = solver_mesh.sharded_sweep(
-            mesh, scn_b, q, x_init, jnp.asarray(pred_b), lr, tol,
-            max_steps, w, prof_b, adaptive=adaptive, gd_chunk=gd_chunk,
-            prof_batched=prof_batched, x_init_batched=x_init_batched)
+            run_mesh, scn_b, q, x_init, jnp.asarray(pred_b), spec.lr,
+            spec.tol, spec.max_steps, w, prof_b, adaptive=spec.adaptive,
+            gd_chunk=spec.gd_chunk, prof_batched=prof_batched,
+            x_init_batched=x_init_batched)
     else:
-        swept = _sweep_batch(scn_b, q, x_init, jnp.asarray(pred_b), lr, tol,
-                             max_steps, w, prof_b, adaptive=adaptive,
-                             gd_chunk=gd_chunk, prof_batched=prof_batched,
+        swept = _sweep_batch(scn_b, q, x_init, jnp.asarray(pred_b), spec.lr,
+                             spec.tol, spec.max_steps, w, prof_b,
+                             adaptive=spec.adaptive, gd_chunk=spec.gd_chunk,
+                             prof_batched=prof_batched,
                              x_init_batched=x_init_batched)
 
     # ---- batched finalize: every compiled stage is ONE dispatch for all
@@ -658,7 +864,7 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
     def at_star(x):
         return x[cell_ix, s_star]
 
-    if per_user_split:
+    if spec.per_user_split:
         costs = _cost_table_batch(scn_b, q, swept.alloc, w, prof_b,
                                   prof_batched=prof_batched)  # (B, F+1, U)
         s_user = jnp.argmin(costs, axis=1).astype(jnp.int32)  # (B, U)
@@ -669,7 +875,8 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *, lr=0.05, tol=1e-5,
         polished = [
             _gd_solve(scn_list[b], s_user[b], q[b],
                       jax.tree.map(lambda x, b=b: x[b], x_star),
-                      lr, tol, max_steps, w, prof_list[b], adaptive=adaptive)
+                      spec.lr, spec.tol, spec.max_steps, w, prof_list[b],
+                      adaptive=spec.adaptive)
             for b in range(n_cells)
         ]
         alloc_b = jax.tree.map(lambda *xs: jnp.stack(xs),

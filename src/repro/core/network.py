@@ -201,6 +201,20 @@ def take_cells(batched, idx):
     return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), batched)
 
 
+def concat_cells(*batched):
+    """Concatenate stacked pytrees (batched ``Scenario``, ``Allocation`` …)
+    along the leading cell axis — the cell-churn remap path's join: a
+    resize gathers surviving lanes out of the old batch (``take_cells``)
+    and concatenates freshly stacked joiners, instead of re-stacking all B
+    cells' leaves on the host."""
+    batched = [b for b in batched if b is not None]
+    if not batched:
+        raise ValueError("need at least one batched pytree")
+    if len(batched) == 1:
+        return batched[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *batched)
+
+
 def envs_differ(scns) -> bool:
     """True when the cells carry different numeric network parameters —
     works on per-cell Scenarios whether their env leaves are floats or the

@@ -36,12 +36,21 @@ from repro.core import ligd, network
 CELL_AXIS = "cells"
 
 
+_MESH_CACHE = {}
+
+
 def cells_mesh(n_devices: int = None):
     """1-D mesh over the solver's cell axis.  ``n_devices=None`` uses every
-    visible device; a smaller request uses a prefix of them."""
+    visible device; a smaller request uses a prefix of them.  Memoised per
+    device count, so ``SolverSpec.run_mesh()``'s lazy all-devices default
+    resolves to the identical Mesh object on every call and the sharded
+    sweep's jit cache never splinters."""
     n_avail = len(jax.devices())
     n = n_avail if n_devices is None else max(1, min(n_devices, n_avail))
-    return jax.make_mesh((n,), (CELL_AXIS,))
+    mesh = _MESH_CACHE.get(n)
+    if mesh is None:
+        mesh = _MESH_CACHE[n] = jax.make_mesh((n,), (CELL_AXIS,))
+    return mesh
 
 
 def pad_lanes(n_lanes: int, n_shards: int):
@@ -123,9 +132,16 @@ def sharded_sweep(mesh, scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w,
     return swept
 
 
-def solve_batch_sharded(scns, prof, q, *args, mesh=None, **kw):
+def solve_batch_sharded(scns, prof, q, *args, mesh=None, spec=None, **kw):
     """``ligd.solve_batch`` on a cells mesh (built over every visible
-    device when ``mesh`` is None).  Thin convenience wrapper — benchmarks
-    and the serving launcher pass ``mesh=`` straight to ``solve_batch``."""
+    device when ``mesh`` is None).  The sharded backend's convenience
+    entry: with ``spec=`` the spec is re-pinned to ``backend='sharded'``
+    on this mesh; otherwise legacy kwargs flow through ``solve_batch``'s
+    deprecation shim.  The ``SolverSpec.backend`` seam is the intended
+    fleet-scale extension point — a future multi-host backend slots in
+    here without touching the serving layer."""
     mesh = cells_mesh() if mesh is None else mesh
+    if spec is not None:
+        spec = spec.replace(backend="sharded", mesh=mesh)
+        return ligd.solve_batch(scns, prof, q, *args, spec=spec, **kw)
     return ligd.solve_batch(scns, prof, q, *args, mesh=mesh, **kw)

@@ -8,12 +8,24 @@ Multi-cell mode (one batched Li-GD solve schedules every cell):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tiny \
       --users 12 --cells 4
 
-Async admission mode (event-driven: serving keeps executing installed
-schedules while a background solver thread re-schedules on simulated
-arrivals and channel drift):
+Async admission mode, now on the ``SplitInferenceCluster`` facade
+(event-driven: serving keeps executing installed schedules while the
+background solver thread re-schedules on simulated arrivals and drift):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tiny \
       --users 12 --cells 2 --async-admission --rounds 6 --arrival-rate 2
+
+Cell-churn demo (mid-run join/leave with zero dropped rounds; surviving
+cells' schedule carry-over is asserted):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tiny \
+      --users 12 --cells 3 --async-admission --rounds 6 --churn
+
+Solver structure flags map onto ONE ``SolverSpec`` (see README.md's
+migration table): ``--backend reference|chunked|sharded`` picks the sweep
+engine, ``--gd-chunk`` its chunk length, ``--full-batch-admission`` the
+``bucket='full'`` policy.  The legacy ``--sharded-solver`` spelling is
+kept as an alias for ``--backend sharded``.
 """
 from __future__ import annotations
 
@@ -33,6 +45,24 @@ def _summarise(tag, results, q):
               f"{r.t_downlink*1e3:.2f}ms -> tokens {r.tokens_out[:6]}")
 
 
+def build_spec(args):
+    """Map launcher flags onto the SolverSpec every solve runs under."""
+    from repro.core.ligd import SolverSpec
+
+    backend = args.backend
+    if args.sharded_solver:                    # legacy alias
+        backend = "sharded"
+    if backend is None:
+        backend = "chunked" if args.gd_chunk else "reference"
+    return SolverSpec(
+        backend=backend,
+        gd_chunk=args.gd_chunk,
+        max_steps=120,
+        per_user_split=not args.no_per_user_split,
+        bucket="full" if args.full_batch_admission else "pow2",
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -47,7 +77,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-per-user-split", action="store_true")
     ap.add_argument("--async-admission", action="store_true",
-                    help="serve with the event-driven admission loop: "
+                    help="serve through the SplitInferenceCluster facade: "
                          "background re-solves on arrivals/drift")
     ap.add_argument("--rounds", type=int, default=4,
                     help="serving rounds in async-admission mode")
@@ -57,20 +87,27 @@ def main():
                     help="Gauss-Markov channel memory per round")
     ap.add_argument("--drift-threshold", type=float, default=0.15,
                     help="divergence past which a cell is re-scheduled")
+    ap.add_argument("--backend", choices=["reference", "chunked", "sharded"],
+                    default=None,
+                    help="SolverSpec backend (default: reference, or "
+                         "chunked when --gd-chunk is set)")
     ap.add_argument("--gd-chunk", type=int, default=0,
                     help="chunked lockstep-free GD segment length "
                          "(0 = while_loop reference)")
     ap.add_argument("--sharded-solver", action="store_true",
-                    help="shard the multi-cell solve over a cells mesh "
-                         "spanning all visible devices (shard_map SPMD)")
+                    help="legacy alias for --backend sharded")
     ap.add_argument("--full-batch-admission", action="store_true",
-                    help="disable bucketed partial rounds: every admission "
-                         "round re-solves all B cells")
+                    help="SolverSpec bucket='full': every admission round "
+                         "re-solves a full-B-shaped batch")
     ap.add_argument("--qoe-half-life-s", type=float, default=None,
                     help="age idle users' QoE thresholds (doubling per "
                          "half-life); default off")
     ap.add_argument("--qoe-age-cap-s", type=float, default=1.0,
                     help="upper bound on aged thresholds, seconds")
+    ap.add_argument("--churn", action="store_true",
+                    help="async mode: add a cell a third of the way in and "
+                         "remove the first cell two thirds in, asserting "
+                         "schedule carry-over + version continuity")
     args = ap.parse_args()
 
     import jax
@@ -89,7 +126,10 @@ def main():
     ncfg = network.small_config(n_users=args.users,
                                 n_subchannels=args.subchannels)
     prof = profiles.transformer_profile(cfg, seq=args.seq_len)
-    per_user = not args.no_per_user_split
+    spec = build_spec(args)
+    if spec.backend == "sharded":
+        print(f"sharded solver: "
+              f"{spec.run_mesh().shape['cells']}-device cells mesh")
 
     def make_tokens(k, n):
         if cfg.n_codebooks > 1:
@@ -102,68 +142,125 @@ def main():
     if args.async_admission:
         import time
 
-        from repro.serving.admission import AdmissionController
+        from repro.serving.cluster import SplitInferenceCluster
 
         cells = max(args.cells, 1)
         scns = [network.make_scenario(jax.random.fold_in(key, 100 + b), ncfg)
                 for b in range(cells)]
-        mesh = None
-        if args.sharded_solver:
-            from repro.distributed import solver_mesh
-            mesh = solver_mesh.cells_mesh()
-            print(f"sharded solver: {mesh.shape['cells']}-device cells mesh")
-        sched = MultiCellScheduler(scns, prof, per_user_split=per_user,
-                                   max_steps=120, gd_chunk=args.gd_chunk,
-                                   mesh=mesh)
-        engine = MultiCellServeEngine(params, cfg, scns, sched)
-        ctl = AdmissionController(engine,
-                                  drift_threshold=args.drift_threshold,
-                                  partial_batch=not args.full_batch_admission,
-                                  qoe_half_life_s=args.qoe_half_life_s,
-                                  q_age_cap=args.qoe_age_cap_s)
-        ctl.bootstrap(np.tile(q, (cells, 1)))
-        toks = np.asarray(make_tokens(jax.random.fold_in(key, 2),
-                                      cells * args.users))
-        toks = toks.reshape((cells, args.users) + toks.shape[1:])
-        # warm the execute path before timing (first round compiles)
-        engine.serve_scheduled_round(toks, decode_steps=args.decode_steps)
+        cluster = SplitInferenceCluster(
+            params, cfg, prof, spec=spec,
+            drift_threshold=args.drift_threshold,
+            qoe_half_life_s=args.qoe_half_life_s,
+            q_age_cap=args.qoe_age_cap_s,
+            default_q_s=args.qoe_ms / 1e3)
+        ids = [cluster.add_cell(scn, q) for scn in scns]
+        cluster.start(threaded=True)
 
-        ctl.start()
+        def fresh_tokens(tag, n=1):
+            t = np.asarray(make_tokens(jax.random.fold_in(key, tag),
+                                       n * args.users))
+            return t.reshape((n, args.users) + t.shape[1:])
+
+        toks = {cid: t for cid, t in zip(ids, fresh_tokens(2, cells))}
+        # warm the execute path before timing (first round compiles)
+        cluster.serve_round(toks, decode_steps=args.decode_steps)
+
         rng = np.random.default_rng(args.seed)
-        live = list(scns)
+        live = {cid: scn for cid, scn in zip(ids, scns)}
+        churn_log = []
+        add_at = args.rounds // 3
+        remove_at = (2 * args.rounds) // 3
         served = 0
+        rounds_executed = 0
         t0 = time.perf_counter()
         for rnd in range(args.rounds):
+            if args.churn and rnd == add_at:
+                scn_new = network.make_scenario(
+                    jax.random.fold_in(key, 900), ncfg)
+                # paused(): the before/after reads and the churn op are
+                # atomic vs the background admission thread, so the
+                # version-continuity assertion cannot race a legitimate
+                # drift re-solve
+                with cluster.paused():
+                    before = cluster.engine.current_schedules()
+                    new_id = cluster.add_cell(scn_new, q)
+                    after = cluster.engine.current_schedules()
+                # zero-downtime contract: ONE version bump, surviving
+                # cells' installed schedule objects carried over verbatim
+                assert after.version == before.version + 1, \
+                    (after.version, before.version)
+                assert all(s_new is s_old for s_new, s_old
+                           in zip(after.schedules, before.schedules)), \
+                    "survivor schedule replaced during add_cell"
+                ids.append(new_id)
+                live[new_id] = scn_new
+                toks[new_id] = fresh_tokens(901)[0]
+                churn_log.append(f"round {rnd}: +cell {new_id} "
+                                 f"(v{before.version}->v{after.version}, "
+                                 "survivors carried)")
+            if args.churn and rnd == remove_at and len(ids) > 1:
+                victim = ids[0]
+                keep_ids = ids[1:]
+                with cluster.paused():
+                    before = cluster.engine.current_schedules()
+                    keep_scheds = [cluster.installed_schedule(c)
+                                   for c in keep_ids]
+                    cluster.remove_cell(victim)
+                    after = cluster.engine.current_schedules()
+                    carried = [cluster.installed_schedule(c)
+                               for c in keep_ids]
+                assert after.version == before.version + 1
+                assert all(a is b for a, b in zip(carried, keep_scheds)), \
+                    "survivor schedule replaced during remove_cell"
+                ids.remove(victim)
+                live.pop(victim)
+                toks.pop(victim)
+                churn_log.append(f"round {rnd}: -cell {victim} "
+                                 f"(v{before.version}->v{after.version}, "
+                                 "survivors carried)")
             # Poisson user arrivals posting fresh QoE deadlines
             n_arr = 0
-            for b in range(cells):
+            for cid in ids:
                 for _ in range(rng.poisson(args.arrival_rate)):
                     u = int(rng.integers(args.users))
-                    ctl.submit(b, u, float(rng.uniform(0.5, 2.0)
-                                           * args.qoe_ms / 1e3))
+                    cluster.submit(cid, u, float(rng.uniform(0.5, 2.0)
+                                                 * args.qoe_ms / 1e3))
                     n_arr += 1
-            # Gauss-Markov channel drift, observed by the controller
+            # Gauss-Markov channel drift, observed through the facade.
+            # fold round then stable CellId: collision-free for any cell
+            # count and any churn history (a single fold of a linear
+            # combination would alias once cells outgrow the stride)
             drifts = []
-            for b in range(cells):
-                live[b] = network.evolve_scenario(
-                    live[b], jax.random.fold_in(key, 1000 + rnd * cells + b),
+            round_key = jax.random.fold_in(key, 1000 + rnd)
+            for cid in ids:
+                live[cid] = network.evolve_scenario(
+                    live[cid], jax.random.fold_in(round_key, int(cid)),
                     rho=args.drift_rho)
-                drifts.append(ctl.observe_scenario(b, live[b]))
-            rounds_out = engine.serve_scheduled_round(
+                drifts.append(cluster.observe(cid, live[cid]))
+            rounds_out = cluster.serve_round(
                 toks, decode_steps=args.decode_steps)
-            served += sum(r.tokens_out.size for results in rounds_out
+            # a round counts only if every live cell actually served
+            assert set(rounds_out) == set(ids) and \
+                all(rounds_out[c] for c in ids), "cell dropped mid-round"
+            rounds_executed += 1
+            served += sum(r.tokens_out.size for results in rounds_out.values()
                           for r in results)
-            print(f"[round {rnd}] arrivals {n_arr} | max drift "
-                  f"{max(drifts):.3f} | schedule v{engine.schedule_version}"
-                  f" | admission rounds {len(ctl.rounds)}")
+            print(f"[round {rnd}] cells {len(ids)} | arrivals {n_arr} | "
+                  f"max drift {max(drifts):.3f} | schedule "
+                  f"v{cluster.schedule_version} | admission rounds "
+                  f"{len(cluster.rounds)}")
         dt = time.perf_counter() - t0
-        ctl.stop()
-        solves = len(ctl.rounds)
-        iters = sum(r.total_iters for r in ctl.rounds)
+        cluster.stop()
+        for line in churn_log:
+            print(f"churn: {line}")
+        # a failed background round would leave cells on stale schedules
+        assert not cluster.errors, cluster.errors
+        solves = len(cluster.rounds)
+        iters = sum(r.total_iters for r in cluster.rounds)
         print(f"async admission: {served} tokens in {dt:.2f}s "
               f"({served/dt:.1f} tok/s) | {solves} admission rounds, "
-              f"{iters} solver iters, final schedule "
-              f"v{engine.schedule_version}")
+              f"{iters} solver iters, {rounds_executed}/{args.rounds} "
+              f"serving rounds, final schedule v{cluster.schedule_version}")
         return 0
 
     if args.cells > 1:
@@ -171,13 +268,7 @@ def main():
         # token key (fold_in(key, 2)) for any cell count
         scns = [network.make_scenario(jax.random.fold_in(key, 100 + b), ncfg)
                 for b in range(args.cells)]
-        mesh = None
-        if args.sharded_solver:
-            from repro.distributed import solver_mesh
-            mesh = solver_mesh.cells_mesh()
-        sched = MultiCellScheduler(scns, prof, per_user_split=per_user,
-                                   max_steps=120, gd_chunk=args.gd_chunk,
-                                   mesh=mesh)
+        sched = MultiCellScheduler(scns, prof, spec=spec)
         engine = MultiCellServeEngine(params, cfg, scns, sched)
         toks = np.asarray(make_tokens(jax.random.fold_in(key, 2),
                                       args.cells * args.users))
@@ -190,7 +281,13 @@ def main():
         return 0
 
     scn = network.make_scenario(jax.random.fold_in(key, 1), ncfg)
-    sched = EraScheduler(scn, prof, per_user_split=per_user, max_steps=120)
+    if spec.backend == "sharded":
+        # one cell has no cell axis to shard — drop to the equivalent
+        # single-device backend
+        spec = spec.replace(mesh=None,
+                            backend="chunked" if spec.gd_chunk
+                            else "reference")
+    sched = EraScheduler(scn, prof, spec=spec)
     engine = SplitServeEngine(params, cfg, scn, prof, sched)
     toks = make_tokens(jax.random.fold_in(key, 2), args.users)
     results = engine.serve_round(np.asarray(toks), q,

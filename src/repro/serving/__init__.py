@@ -1,1 +1,3 @@
-from repro.serving import admission, engine, scheduler, split_runtime  # noqa: F401
+from repro.serving import (admission, cluster, engine,  # noqa: F401
+                           scheduler, split_runtime)
+from repro.serving.cluster import CellId, SplitInferenceCluster  # noqa: F401

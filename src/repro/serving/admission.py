@@ -43,6 +43,20 @@ Admission round lifecycle
      vector) is updated, so subsequent drift is measured against the
      state its *current* schedule was actually solved on.
 
+Cell churn (coordinated join/leave): ``add_cell``/``remove_cell`` run a
+membership change as one atomic unit against the round lifecycle — the
+scheduler's stacked prep is remapped (survivors gathered device-side),
+only a joining lane is solved (a 1-lane bucket; a leave solves nothing),
+and the engine's cell list + schedules swap in ONE versioned install
+carrying surviving cells' installed schedules over object-identical.
+Drift references, posted/aged thresholds and queued arrivals/dirty marks
+all follow the lane remap (``AdmissionQueue.remap``), so drift keeps
+being measured against each surviving cell's OWN solved snapshot — the
+positional-reference bug the pre-churn ``resize`` stopgap had.  Churn
+serialises against admission rounds via the round lock; producers and
+serving never block on it.  The ``SplitInferenceCluster`` facade keys all
+of this by stable ``CellId`` (serving.cluster).
+
 Drift-aware QoE aging (``qoe_half_life_s``): a user's posted deadline is
 only as fresh as its last arrival.  Long-idle users' thresholds relax
 exponentially — the effective threshold doubles every half-life since the
@@ -59,8 +73,10 @@ on a condition variable, never polls.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
@@ -131,6 +147,18 @@ class AdmissionQueue:
             arrivals, self._arrivals = self._arrivals, []
             dirty, self._dirty = self._dirty, set()
             return arrivals, dirty
+
+    def remap(self, old_to_new: Dict[int, int]) -> None:
+        """Rewrite queued work after a cell-lane remap (churn): arrivals
+        and dirty marks for surviving cells move to their new lanes, work
+        for removed cells (absent from the map) is dropped.  Atomic under
+        the queue lock, so producers never see a half-remapped queue."""
+        with self._cond:
+            self._arrivals = [
+                dataclasses.replace(a, cell=old_to_new[a.cell])
+                for a in self._arrivals if a.cell in old_to_new]
+            self._dirty = {old_to_new[c] for c in self._dirty
+                           if c in old_to_new}
 
     def has_work(self) -> bool:
         with self._cond:
@@ -224,6 +252,14 @@ class AdmissionController:
         self._q: Optional[np.ndarray] = None   # (B, U) posted thresholds
         self._t_posted: Optional[np.ndarray] = None  # (B, U) last-post time
         self._state_lock = threading.Lock()
+        # serialises whole admission ROUNDS (step) against cell churn
+        # (add_cell/remove_cell): a membership change must never interleave
+        # with a drained-but-not-yet-swapped round, whose lane indices
+        # would silently point at the wrong cells after the remap.
+        # Producers (submit/observe_scenario) never take it — serving
+        # stays wait-free against a long solve.  Reentrant so churn can
+        # run from within a paused loop if callers compose them.
+        self._round_lock = threading.RLock()
         self._thread: Optional[threading.Thread] = None
         self._stopping = threading.Event()
         self._last_round_t: Optional[float] = None
@@ -253,33 +289,50 @@ class AdmissionController:
         validated HERE, in the producer's thread — a malformed arrival must
         not reach (and kill) the background solver loop.  Requires
         ``bootstrap()`` first: the user axis is unknown (hence
-        unvalidatable) before the initial install."""
+        unvalidatable) before the initial install.
+
+        Validation AND enqueue happen under the state lock: cell churn
+        remaps the queue under the same lock, so an arrival is either
+        enqueued before the remap (and remapped with it) or validated
+        against the post-churn lanes — never enqueued against a stale
+        lane it was validated on."""
         cell, user = int(cell), int(user)
-        if not 0 <= cell < self.n_cells:
-            raise ValueError(f"cell {cell} out of range [0, {self.n_cells})")
         with self._state_lock:
-            n_users = None if self._q is None else self._q.shape[1]
-        if n_users is None:
-            raise RuntimeError("bootstrap() before submitting arrivals")
-        if not 0 <= user < n_users:
-            raise ValueError(f"user {user} out of range [0, {n_users})")
-        arrival = Arrival(cell, user, float(q_s), self.clock())
-        self.queue.submit(arrival)
+            if self._q is None:
+                raise RuntimeError("bootstrap() before submitting arrivals")
+            if not 0 <= cell < len(self._live):
+                raise ValueError(
+                    f"cell {cell} out of range [0, {len(self._live)})")
+            n_users = self._q.shape[1]
+            if not 0 <= user < n_users:
+                raise ValueError(f"user {user} out of range [0, {n_users})")
+            arrival = Arrival(cell, user, float(q_s), self.clock())
+            self.queue.submit(arrival)
         return arrival
 
     def observe_scenario(self, cell: int, scn) -> float:
         """Publish a cell's live channel snapshot; returns its drift vs.
         the snapshot the active schedule was solved on, and marks the cell
-        for re-scheduling when past the divergence threshold."""
+        for re-scheduling when past the divergence threshold.
+
+        The whole read-modify-write runs under the state lock (which cell
+        churn also holds while remapping), so the live-state write, the
+        engine update and the dirty mark can never land on a lane that a
+        concurrent remove has shifted or dropped."""
         cell = int(cell)
-        if not 0 <= cell < self.n_cells:
-            raise ValueError(f"cell {cell} out of range [0, {self.n_cells})")
         with self._state_lock:
+            if not 0 <= cell < len(self._live):
+                raise ValueError(
+                    f"cell {cell} out of range [0, {len(self._live)})")
             self._live[cell] = scn
             drift = network.scenario_drift(scn, self._ref[cell])
-        self.engine.set_scenario(cell, scn)
-        if drift > self.drift_threshold:
-            self.queue.mark_dirty(cell)
+            # during an add_cell the joiner exists in controller state
+            # before the engine publishes it (resize) — skip the engine
+            # write then; resize installs the fresh _live wholesale
+            if cell < len(self.engine.scns):
+                self.engine.set_scenario(cell, scn)
+            if drift > self.drift_threshold:
+                self.queue.mark_dirty(cell)
         return drift
 
     # ---- the admission round (consumer) -------------------------------
@@ -291,7 +344,15 @@ class AdmissionController:
         scheduler's bucket ladder so every round shape is one of O(log B)
         compiled programs); otherwise all B lanes solve and only touched
         cells' schedules are swapped.  Either way, references reset only
-        for touched cells."""
+        for touched cells.
+
+        The whole round — drain through swap — runs under ``_round_lock``
+        so cell churn (``add_cell``/``remove_cell``) can never remap lanes
+        out from under a round in flight."""
+        with self._round_lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> Optional[AdmissionRound]:
         arrivals, dirty = self.queue.drain()
         if not arrivals and not dirty:
             return None
@@ -342,6 +403,133 @@ class AdmissionController:
         self.rounds.append(rnd)
         self.round_done.set()
         return rnd
+
+    # ---- cell churn (coordinated join/leave) --------------------------
+    @contextmanager
+    def paused(self):
+        """Hold the round lock: no admission round or churn runs inside
+        the block (producers and serving stay live).  Lets callers compose
+        a churn op with reads of the before/after engine state atomically
+        — e.g. the launcher's version-continuity assertion."""
+        with self._round_lock:
+            yield
+
+    def add_cell(self, scn, q_row, prof=None) -> int:
+        """Admit a new cell with channel snapshot ``scn`` and per-user QoE
+        thresholds ``q_row`` (scalar or (U,)).  Returns its lane index
+        (always appended: ``B_old``).  ``prof``: the joiner's split
+        profile — required when the scheduler carries per-cell profiles,
+        ignored (with a loud error if given) for a shared profile.
+
+        Coordinated, zero-downtime: the scheduler's stacked prep is
+        remapped (survivors gathered device-side, the joiner concatenated),
+        ONLY the new lane is solved (a 1-lane bucket, not a B-lane
+        restack), and the engine's cell list + schedules swap in one
+        versioned install where every surviving cell KEEPS its installed
+        schedule object.  Drift references, warm-start state, posted/aged
+        thresholds and queued work all survive untouched.  Serialised
+        against admission rounds via ``_round_lock``; serving rounds in
+        flight finish on the snapshot they grabbed."""
+        with self._round_lock:
+            if self._q is None:
+                raise RuntimeError("bootstrap() before cell churn")
+            n_users = self._q.shape[1]
+            q_row = np.broadcast_to(
+                np.asarray(q_row, np.float32), (n_users,)).copy()
+            n_old = self.n_cells
+            lane = n_old
+            keep = {i: i for i in range(n_old)}
+            per_cell_prof = isinstance(self.scheduler.prof, (list, tuple))
+            if per_cell_prof and prof is None:
+                raise ValueError("scheduler carries per-cell profiles — "
+                                 "add_cell needs the joiner's prof=")
+            if not per_cell_prof and prof is not None:
+                raise ValueError("scheduler shares one profile across "
+                                 "cells; per-cell prof= does not apply")
+            # survivors keep the snapshots they were last SOLVED on (the
+            # scheduler's own list); the joiner enters with its live one
+            self.scheduler.resize(
+                list(self.scheduler.scns) + [scn], keep=keep,
+                prof=list(self.scheduler.prof) + [prof] if per_cell_prof
+                else None)
+            now = self.clock()
+            with self._state_lock:
+                self._q = np.concatenate([self._q, q_row[None]], axis=0)
+                self._t_posted = np.concatenate(
+                    [self._t_posted, np.full((1, n_users), now)], axis=0)
+                self._live.append(scn)
+                self._ref.append(scn)
+                q = self._effective_q_locked(now)
+            # bucket='exact': a join solves exactly its one lane even
+            # under the 'full' admission policy (whose B-wide padding
+            # would replicate the joiner B times for nothing)
+            sched = self.scheduler.schedule(q, warm=self.warm_start,
+                                            cells=[lane],
+                                            bucket="exact")[0]
+            # publish under the state lock: producers running concurrently
+            # with the solve above see a consistent (state, engine) pair
+            with self._state_lock:
+                version = self.engine.resize(list(self._live),
+                                             schedules={lane: sched},
+                                             keep=keep)
+            rnd = AdmissionRound(
+                version=version, cells=(lane,), n_arrivals=0, drift={},
+                total_iters=sched.iters, t_start=now,
+                t_installed=self.clock())
+            self._last_round_t = rnd.t_installed
+            self.rounds.append(rnd)
+            self.round_done.set()
+            return lane
+
+    def remove_cell(self, lane: int) -> Dict[int, int]:
+        """Evict cell ``lane``; surviving lanes shift down.  Returns the
+        {old_lane: new_lane} remap the caller (``SplitInferenceCluster``)
+        uses to move its stable CellId table.
+
+        No solve at all: survivors' installed schedules, warm-start
+        allocations, drift references and posted/aged thresholds are
+        remapped in place (this is the fix for the latent positional-
+        reference bug the ROADMAP noted — before this, references silently
+        pointed at the wrong cell after a resize).  Queued arrivals/drift
+        marks for the removed cell are dropped; the rest follow the remap."""
+        with self._round_lock:
+            lane = int(lane)
+            n_old = self.n_cells
+            if not 0 <= lane < n_old:
+                raise ValueError(f"cell {lane} out of range [0, {n_old})")
+            if n_old == 1:
+                raise ValueError("cannot remove the last cell (the stacked "
+                                 "solver needs >= 1 lane)")
+            if self._q is None:
+                raise RuntimeError("bootstrap() before cell churn")
+            survivors = [i for i in range(n_old) if i != lane]
+            keep = {new: old for new, old in enumerate(survivors)}
+            old_to_new = {old: new for new, old in keep.items()}
+            prof = self.scheduler.prof
+            self.scheduler.resize(
+                [self.scheduler.scns[i] for i in survivors], keep=keep,
+                prof=[prof[i] for i in survivors]
+                if isinstance(prof, (list, tuple)) else None)
+            now = self.clock()
+            # ONE state-lock hold over thresholds, live/ref snapshots,
+            # queued work and the engine install: a producer observes
+            # either the whole pre-remove world or the whole post-remove
+            # one — its lane can never be half-remapped under it
+            with self._state_lock:
+                self._q = self._q[survivors]
+                self._t_posted = self._t_posted[survivors]
+                self._live = [self._live[i] for i in survivors]
+                self._ref = [self._ref[i] for i in survivors]
+                self.queue.remap(old_to_new)
+                version = self.engine.resize(list(self._live), schedules={},
+                                             keep=keep)
+            rnd = AdmissionRound(
+                version=version, cells=(), n_arrivals=0, drift={},
+                total_iters=0, t_start=now, t_installed=self.clock())
+            self._last_round_t = rnd.t_installed
+            self.rounds.append(rnd)
+            self.round_done.set()
+            return old_to_new
 
     # ---- background solver thread -------------------------------------
     def start(self) -> None:

@@ -191,29 +191,99 @@ class MultiCellServeEngine:
             self._installed = ScheduleSet(version, tuple(scheds))
             return version
 
-    def resize(self, scns, schedules: Sequence[Schedule]) -> int:
-        """Cell-churn stopgap: atomically replace the cell list AND its
-        schedules in one versioned swap (callers resize the scheduler
-        first — ``MultiCellScheduler.resize`` — then solve, then hand the
-        fresh schedules here).  In-flight rounds finish on the snapshot
-        they grabbed; an ``AdmissionController`` wrapped around this
-        engine must be rebuilt (its drift references are per-cell) — the
-        coordinated join/leave path stays a ROADMAP item."""
+    def resize(self, scns, schedules=None, keep: Dict[int, int] = None
+               ) -> int:
+        """Cell churn: atomically replace the cell list AND its schedules
+        in ONE versioned swap.  In-flight rounds finish on the snapshot
+        they grabbed; the next round sees the new cell set — zero-downtime
+        handoff.
+
+        Two calling conventions:
+          * ``schedules`` = full per-cell sequence (the pre-facade path:
+            resize the scheduler, re-solve everything, install here);
+          * ``keep`` = {new_lane: old_lane} carrying surviving cells'
+            INSTALLED schedules over unchanged (version continuity — no
+            re-solve for survivors), with ``schedules`` = {new_lane:
+            Schedule} covering only the lanes ``keep`` does not (joiners).
+        Every new lane must end up with a schedule from one of the two.
+
+        The coordinated join/leave path — admission-controller state
+        following the remap — is ``AdmissionController.add_cell``/
+        ``remove_cell``, which call this; the ``SplitInferenceCluster``
+        facade keys it all by stable ``CellId``."""
         scns = list(scns)
-        scheds = tuple(schedules)
-        if len(scheds) != len(scns):
-            raise ValueError(f"need one schedule per cell: {len(scns)} "
-                             f"cells, {len(scheds)} schedules")
+        if schedules is None and keep is None:
+            raise ValueError("resize needs schedules (full sequence or "
+                             "{lane: Schedule}) and/or keep= "
+                             "{new_lane: old_lane} — every new lane must "
+                             "get a schedule from one of the two")
         with self._lock:
-            version = (self._installed.version + 1) if self._installed else 1
+            cur = self._installed
+            if keep is not None or isinstance(schedules, dict):
+                scheds: List[Optional[Schedule]] = [None] * len(scns)
+                for new_i, old_i in (keep or {}).items():
+                    if cur is None:
+                        raise RuntimeError("keep= carries installed "
+                                           "schedules over, but none are "
+                                           "installed yet")
+                    if not (0 <= new_i < len(scns)
+                            and 0 <= old_i < len(cur.schedules)):
+                        raise ValueError(f"keep entry {new_i}->{old_i} out "
+                                         "of range")
+                    scheds[new_i] = cur.schedules[old_i]
+                for new_i, sched in (schedules or {}).items():
+                    if not 0 <= int(new_i) < len(scns):
+                        raise ValueError(f"schedule for lane {new_i} out "
+                                         f"of range [0, {len(scns)})")
+                    scheds[int(new_i)] = sched
+                missing = [i for i, s in enumerate(scheds) if s is None]
+                if missing:
+                    raise ValueError(f"lanes {missing} have neither a "
+                                     "carried-over (keep=) nor a fresh "
+                                     "schedule")
+            else:
+                scheds = list(schedules)
+                if len(scheds) != len(scns):
+                    raise ValueError(f"need one schedule per cell: "
+                                     f"{len(scns)} cells, {len(scheds)} "
+                                     "schedules")
+            version = (cur.version + 1) if cur else 1
             self.scns = scns
-            self._installed = ScheduleSet(version, scheds)
+            self._installed = ScheduleSet(version, tuple(scheds))
             return version
 
     def current_schedules(self) -> Optional[ScheduleSet]:
         """Consistent snapshot (single reference read under the lock)."""
         with self._lock:
             return self._installed
+
+    def round_snapshot(self):
+        """(ScheduleSet, scns, profiles) for one executing round.  The
+        schedule/cell pair is captured under ONE lock acquisition (resize
+        swaps both under it), and the per-lane profiles are resolved HERE
+        rather than lane-by-lane during execution, so a concurrent churn
+        shrinking the scheduler's profile list mid-round can neither shift
+        a lane onto the wrong cell's profile nor index past the end.  The
+        cluster facade calls this under its own lock (which churn also
+        holds), making the whole triple churn-consistent."""
+        with self._lock:
+            ss, scns = self._installed, list(self.scns)
+        profs = [self.scheduler.profile_for(b) for b in range(len(scns))]
+        return ss, scns, profs
+
+    def serve_snapshot(self, ss: ScheduleSet, scns, profs,
+                       tokens_per_cell, *, decode_steps=0
+                       ) -> List[List[RequestResult]]:
+        """Execute one round on an explicit ``round_snapshot`` triple —
+        callers that pair the snapshot with their own per-cell state (the
+        facade's CellId keying) capture it atomically and execute here,
+        immune to concurrent churn."""
+        rounds = []
+        for b, sched in enumerate(ss.schedules):
+            rounds.append(execute_schedule(
+                self.params, self.cfg, scns[b].cfg, profs[b], sched,
+                tokens_per_cell[b], decode_steps=decode_steps))
+        return rounds
 
     @property
     def schedule_version(self) -> int:
@@ -231,17 +301,12 @@ class MultiCellServeEngine:
     def serve_scheduled_round(self, tokens_per_cell, *, decode_steps=0
                               ) -> List[List[RequestResult]]:
         """Execute one round with the installed schedules — no solve."""
-        ss = self.current_schedules()
+        ss, scns, profs = self.round_snapshot()
         if ss is None:
             raise RuntimeError("no schedules installed yet "
                                "(bootstrap with install_schedules)")
-        rounds = []
-        for b, sched in enumerate(ss.schedules):
-            rounds.append(execute_schedule(
-                self.params, self.cfg, self.scns[b].cfg,
-                self.scheduler.profile_for(b), sched, tokens_per_cell[b],
-                decode_steps=decode_steps))
-        return rounds
+        return self.serve_snapshot(ss, scns, profs, tokens_per_cell,
+                                   decode_steps=decode_steps)
 
     def serve_round(self, tokens_per_cell, q_per_cell, *,
                     decode_steps=0) -> List[List[RequestResult]]:

@@ -50,10 +50,17 @@ def bucket_sizes(n_cells: int) -> List[int]:
     return sizes
 
 
-def bucket_for(k: int, n_cells: int) -> int:
-    """Smallest ladder size that fits k dirty cells."""
+def bucket_for(k: int, n_cells: int, policy: str = "pow2") -> int:
+    """Padded lane count for k dirty cells under ``SolverSpec.bucket``:
+    'pow2' = smallest ladder size that fits (the default — O(log B)
+    compiled variants), 'exact' = k itself (no padding, one compiled
+    program per subset size), 'full' = always all B lanes."""
     if not 1 <= k <= n_cells:
         raise ValueError(f"k must be in [1, {n_cells}], got {k}")
+    if policy == "exact":
+        return k
+    if policy == "full":
+        return n_cells
     # the ladder always ends with n_cells and k <= n_cells, so this returns
     for n in bucket_sizes(n_cells):
         if n >= k:
@@ -110,24 +117,51 @@ def build_schedule(scn, out: ligd.LiGDOutcome) -> Schedule:
     )
 
 
+def _ctor_spec(spec: Optional[ligd.SolverSpec], where: str, defaults: Dict,
+               **legacy) -> ligd.SolverSpec:
+    """Spec resolution for the scheduler constructors: exact ``spec=`` vs
+    legacy-kwarg mix detection via ligd's unset sentinel (an explicitly
+    passed kwarg always raises alongside ``spec=``, even at its default
+    value), and the schedulers' own historical defaults — which
+    intentionally differ from ``SolverSpec``'s (``per_user_split=True``
+    here) — applied only when no spec is given."""
+    passed = {k: v for k, v in legacy.items() if v is not ligd._UNSET}
+    if spec is not None:
+        if passed:
+            raise ValueError(f"{where}: pass either spec= or the legacy "
+                             f"kwargs {sorted(passed)}, not both")
+        return spec
+    kw = dict(defaults)
+    kw.update(passed)
+    return ligd.spec_from_kwargs(**kw)
+
+
 class EraScheduler:
     def __init__(self, scn, prof: profiles.SplitProfile,
-                 weights: Weights = Weights(), *, per_user_split=True,
-                 max_steps=400, lr=0.05, tol=1e-5, compiled_sweep=True):
+                 weights: Weights = Weights(),
+                 spec: ligd.SolverSpec = None, *,
+                 per_user_split=ligd._UNSET, max_steps=ligd._UNSET,
+                 lr=ligd._UNSET, tol=ligd._UNSET,
+                 compiled_sweep=ligd._UNSET):
+        """One-cell ERA scheduler.  ``spec`` describes the solve
+        (``SolverSpec``); the legacy kwargs are folded onto one when no
+        spec is given (their historical defaults preserved).  Mixing
+        ``spec=`` with a legacy kwarg raises, mirroring ``ligd.solve`` —
+        a silently dropped kwarg is worse than an error."""
+        spec = _ctor_spec(spec, "EraScheduler",
+                          dict(per_user_split=True, max_steps=400, lr=0.05,
+                               tol=1e-5, compiled_sweep=True),
+                          per_user_split=per_user_split,
+                          max_steps=max_steps, lr=lr, tol=tol,
+                          compiled_sweep=compiled_sweep)
         self.scn = scn
         self.prof = prof
         self.weights = weights
-        self.per_user_split = per_user_split
-        self.max_steps = max_steps
-        self.lr = lr
-        self.tol = tol
-        self.compiled_sweep = compiled_sweep
+        self.spec = spec
 
     def schedule(self, q_thresholds) -> Schedule:
         out = ligd.solve(self.scn, self.prof, jnp.asarray(q_thresholds),
-                         self.weights, per_user_split=self.per_user_split,
-                         max_steps=self.max_steps, lr=self.lr, tol=self.tol,
-                         compiled_sweep=self.compiled_sweep)
+                         self.weights, spec=self.spec)
         return build_schedule(self.scn, out)
 
 
@@ -140,22 +174,35 @@ class MultiCellScheduler:
     returns one Schedule per cell."""
 
     def __init__(self, scns: Sequence, prof,
-                 weights: Weights = Weights(), *, per_user_split=True,
-                 max_steps=400, lr=0.05, tol=1e-5, gd_chunk=0, mesh=None):
+                 weights: Weights = Weights(),
+                 spec: ligd.SolverSpec = None, *,
+                 per_user_split=ligd._UNSET, max_steps=ligd._UNSET,
+                 lr=ligd._UNSET, tol=ligd._UNSET, gd_chunk=ligd._UNSET,
+                 mesh=ligd._UNSET):
+        """``spec`` (``SolverSpec``) describes every solve this scheduler
+        runs — backend, GD knobs, bucket policy.  The legacy kwargs are
+        folded onto one when no spec is given (historical defaults
+        preserved; ``gd_chunk``/``mesh`` select the chunked/sharded
+        backends exactly as ``ligd.spec_from_kwargs`` does).  Mixing
+        ``spec=`` with a legacy kwarg raises, mirroring
+        ``ligd.solve_batch``."""
+        spec = _ctor_spec(spec, "MultiCellScheduler",
+                          dict(per_user_split=True, max_steps=400, lr=0.05,
+                               tol=1e-5, gd_chunk=0, mesh=None),
+                          per_user_split=per_user_split,
+                          max_steps=max_steps, lr=lr, tol=tol,
+                          gd_chunk=gd_chunk, mesh=mesh)
+        if spec.backend == "sharded" and spec.mesh is None:
+            # resolve the all-devices default ONCE so every schedule()
+            # call keys the sharded sweep's jit cache on the same Mesh
+            spec = spec.replace(mesh=spec.run_mesh())
+        self.spec = spec
         self.scns = list(scns)
         # round-invariant solver inputs (stacked scenarios/profiles,
         # warm-start predecessors) are derived once, not per schedule()
-        self.prep = ligd.prepare_batch(self.scns, prof)
+        self.prep = ligd.prepare_batch(self.scns, prof, spec.warm_start)
         self.prof = prof
         self.weights = weights
-        self.per_user_split = per_user_split
-        self.max_steps = max_steps
-        self.lr = lr
-        self.tol = tol
-        # lockstep mitigation + SPMD sharding knobs, passed through to
-        # ligd.solve_batch (0/None = vmapped while_loop on one device)
-        self.gd_chunk = gd_chunk
-        self.mesh = mesh
         self.last_outcomes: List[Optional[ligd.LiGDOutcome]] = []
 
     @property
@@ -210,25 +257,102 @@ class MultiCellScheduler:
 
     def resize(self, scns: Sequence, prof=None, keep: Dict[int, int] = None
                ) -> None:
-        """Cell-churn stopgap: rebuild the stacked scenarios/profiles for a
-        new cell list without dropping warm-start state for surviving
-        cells.  ``keep`` maps new cell index -> old cell index (default:
-        identity over the overlapping prefix); unmapped new cells start
-        cold (uniform initial point on their first warm solve).  The full
-        join/leave design — engine-coordinated, schedule carry-over —
-        stays a ROADMAP item."""
-        prof = self.prof if prof is None else prof
+        """Cell churn: remap the stacked scenarios/profiles to a new cell
+        list without dropping warm-start state for surviving cells.
+        ``keep`` maps new lane -> old lane (default: identity over the
+        overlapping prefix); unmapped new lanes start cold (uniform
+        initial point on their first warm solve).
+
+        When the profile set is unchanged (shared, ``prof=None``) and
+        every surviving lane carries the scenario object it was last
+        solved on, the stacked prep is REMAPPED rather than rebuilt:
+        surviving lanes are gathered out of the old device-side batch
+        (``network.take_cells``), joiners are stacked once and
+        concatenated (``network.concat_cells``) — no O(B) host restack.
+        Anything else (new profiles, per-cell profile lists, replaced
+        survivor scenarios) falls back to a full ``prepare_batch``."""
+        old_prep = self.prep
         old_outs = self.last_outcomes
-        self.scns = list(scns)
-        self.prof = prof
-        self.prep = ligd.prepare_batch(self.scns, prof)
+        scns = list(scns)
         if keep is None:
-            keep = {i: i for i in range(min(len(self.scns), len(old_outs)))}
-        outs: List[Optional[ligd.LiGDOutcome]] = [None] * len(self.scns)
+            keep = {i: i for i in range(min(len(scns), len(old_outs)))}
+        keep = {n: o for n, o in keep.items()
+                if 0 <= n < len(scns) and 0 <= o < len(old_prep.scn_list)}
+        new_prep = None
+        if prof is None and not old_prep.prof_batched and scns:
+            new_prep = self._remap_prep(scns, keep, old_prep)
+        if new_prep is None:
+            new_prep = ligd.prepare_batch(
+                scns, self.prof if prof is None else prof,
+                self.spec.warm_start)
+        self.scns = scns
+        if prof is not None:
+            self.prof = prof
+        self.prep = new_prep
+        outs: List[Optional[ligd.LiGDOutcome]] = [None] * len(scns)
         for new_i, old_i in keep.items():
-            if 0 <= new_i < len(self.scns) and 0 <= old_i < len(old_outs):
+            if old_i < len(old_outs):
                 outs[new_i] = old_outs[old_i]
         self.last_outcomes = outs
+
+    def _remap_prep(self, scns, keep: Dict[int, int],
+                    prep: ligd.BatchPrep) -> Optional[ligd.BatchPrep]:
+        """Gather-survivors + concat-joiners prep for ``resize``'s fast
+        path; None when the mapping needs a full rebuild.  Survivor lanes
+        must carry the IDENTICAL scenario object they were last solved on
+        — a different object for a kept lane means new channel state the
+        gathered rows would silently miss, so it is treated as fresh."""
+        ref_cfg = prep.scn_list[0].cfg
+        lanes, fresh = [], []
+        for i, scn in enumerate(scns):
+            o = keep.get(i)
+            if o is not None and scn is prep.scn_list[o]:
+                lanes.append(("old", o))
+            else:
+                if not network.struct_compatible(scn.cfg, ref_cfg):
+                    return None
+                lanes.append(("new", len(fresh)))
+                fresh.append(scn)
+        old_idx = [o for kind, o in lanes if kind == "old"]
+        parts, pred_parts = [], []
+        if old_idx:
+            parts.append(network.take_cells(prep.scn_b, old_idx))
+            pred_parts.append(prep.pred_b[old_idx])
+        if fresh:
+            # normalise the joiners' static cfg aux to the old batch's
+            # representative so the concatenated pytrees share a treedef
+            # (per-cell numerics still travel via each env leaf)
+            norm = [s if s.cfg == ref_cfg else
+                    network.Scenario(ref_cfg, s.assoc, s.h_up, s.h_dn,
+                                     s.up_order, s.up_group_end, s.dn_order,
+                                     s.dn_group_end, env=s.env)
+                    for s in fresh]
+            parts.append(network.stack_scenarios(norm))
+            pred_row = ligd.warm_start_predecessors(
+                prep.prof_list[0].uplink_bits, self.spec.warm_start)
+            pred_parts.append(np.stack([pred_row] * len(fresh)))
+        scn_b = network.concat_cells(*parts)
+        pred_b = np.concatenate(pred_parts, axis=0)
+        # parts are ordered [survivors..., joiners...]; permute back to
+        # lane order (identity for the common append-joiners case)
+        n_old = len(old_idx)
+        pos, n_seen_old = [], 0
+        for kind, j in lanes:
+            pos.append(n_seen_old if kind == "old" else n_old + j)
+            if kind == "old":
+                n_seen_old += 1
+        if pos != list(range(len(lanes))):
+            scn_b = network.take_cells(scn_b, pos)
+            pred_b = pred_b[pos]
+        return ligd.BatchPrep(
+            scn_b=scn_b,
+            scn_list=tuple(scns),
+            prof_b=prep.prof_b,
+            prof_list=(prep.prof_list[0],) * len(scns),
+            prof_batched=False,
+            pred_b=pred_b,
+            hetero=network.envs_differ(scns),
+        )
 
     def _warm_init(self, lanes: Sequence[int]):
         """Warm-start Allocation for ``lanes`` from the previous outcomes;
@@ -260,8 +384,8 @@ class MultiCellScheduler:
         )
 
     def schedule(self, q_per_cell, *, warm: bool = False,
-                 init_alloc=None, cells: Sequence[int] = None
-                 ) -> List[Schedule]:
+                 init_alloc=None, cells: Sequence[int] = None,
+                 bucket: str = None) -> List[Schedule]:
         """One batched solve -> one Schedule per cell.
 
         ``warm=True`` seeds the solve from the previous ``schedule`` call's
@@ -270,28 +394,29 @@ class MultiCellScheduler:
         explicitly.
 
         ``cells``: solve only this cell subset (a partial admission
-        round), padded to the smallest ``bucket_sizes`` ladder entry that
-        fits — per-bucket shapes hit jit's compile cache, so each bucket
-        size compiles once.  Returns Schedules aligned with ``cells``
-        order; other cells' warm-start state is left untouched."""
+        round), padded per the ``bucket`` policy (default: the spec's —
+        the pow2 ladder hits jit's compile cache, so each bucket size
+        compiles once; churn passes ``bucket='exact'`` so a join solves
+        exactly its one lane regardless of policy).  Returns Schedules
+        aligned with ``cells`` order; other cells' warm-start state is
+        left untouched."""
         q = jnp.asarray(q_per_cell)
         if cells is not None:
             return self._schedule_subset(q, list(cells), warm=warm,
-                                         init_alloc=init_alloc)
+                                         init_alloc=init_alloc,
+                                         bucket=bucket)
         if init_alloc is None and warm and self.last_outcomes:
             init_alloc = self._warm_init(range(self.n_cells))
         outs = ligd.solve_batch(self.scns, self.prof, q, self.weights,
-                                per_user_split=self.per_user_split,
-                                max_steps=self.max_steps, lr=self.lr,
-                                tol=self.tol, prep=self.prep,
-                                init_alloc=init_alloc,
-                                gd_chunk=self.gd_chunk, mesh=self.mesh)
+                                spec=self.spec, prep=self.prep,
+                                init_alloc=init_alloc)
         self.last_outcomes = list(outs)
         return [build_schedule(scn, out)
                 for scn, out in zip(self.scns, outs)]
 
     def _schedule_subset(self, q, cells: List[int], *, warm: bool,
-                         init_alloc=None) -> List[Schedule]:
+                         init_alloc=None, bucket: str = None
+                         ) -> List[Schedule]:
         if not cells:
             return []
         if sorted(set(cells)) != sorted(cells) or \
@@ -305,18 +430,18 @@ class MultiCellScheduler:
             raise ValueError(f"q must be the full (B={self.n_cells}, U) "
                              f"threshold matrix, got {q.shape}")
         k = len(cells)
-        n = bucket_for(k, self.n_cells)
+        n = bucket_for(k, self.n_cells, bucket or self.spec.bucket)
         lanes = cells + [cells[-1]] * (n - k)      # pad: repeat last cell
-        prep = self._prep_subset(lanes)
+        # identity lanes (k == B in order, or the 'full' policy landing on
+        # an in-order full set) reuse the stored prep — no gather needed
+        prep = self.prep if lanes == list(range(self.n_cells)) \
+            else self._prep_subset(lanes)
         q_sub = q[jnp.asarray(lanes)]
         if init_alloc is None and warm:
             init_alloc = self._warm_init(lanes)
         outs = ligd.solve_batch(None, None, q_sub, self.weights,
-                                per_user_split=self.per_user_split,
-                                max_steps=self.max_steps, lr=self.lr,
-                                tol=self.tol, prep=prep,
-                                init_alloc=init_alloc,
-                                gd_chunk=self.gd_chunk, mesh=self.mesh)
+                                spec=self.spec, prep=prep,
+                                init_alloc=init_alloc)
         if not self.last_outcomes:
             self.last_outcomes = [None] * self.n_cells
         for j, c in enumerate(cells):              # real lanes only

@@ -1,0 +1,382 @@
+"""SplitInferenceCluster lifecycle: stable CellIds, zero-downtime churn,
+and the id->lane remap threading through scheduler / engine / admission
+controller.
+
+Everything is solver-only (engine params=None — no model execution) and
+deterministic: fake clock, sync admission (threaded=False), tiny solves.
+
+The hypothesis property test is the churn contract in one sentence: ANY
+interleaving of add/remove/submit/observe/step preserves surviving cells'
+warm-start allocations, posted/aged thresholds and drift references,
+keyed by CellId — never by lane.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import network, profiles
+from repro.core.ligd import SolverSpec
+from repro.serving.cluster import SplitInferenceCluster
+
+pytestmark = pytest.mark.cluster
+
+N_USERS = 6
+N_SUBCH = 3
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _scn(seed):
+    cfg = network.small_config(n_users=N_USERS, n_subchannels=N_SUBCH)
+    return network.make_scenario(jax.random.PRNGKey(seed), cfg)
+
+
+def _cluster(n=3, start=True, **kw):
+    spec = kw.pop("spec", SolverSpec(max_steps=5, tol=0.0))
+    clock = FakeClock()
+    cl = SplitInferenceCluster(None, None, profiles.get_profile("nin"),
+                               spec=spec, clock=clock, default_q_s=0.4,
+                               drift_threshold=0.15, **kw)
+    ids = [cl.add_cell(_scn(s)) for s in range(n)]
+    if start:
+        cl.start(threaded=False)
+    return cl, ids, clock
+
+
+# ------------------------------------------------------------- lifecycle
+def test_staged_cells_and_start():
+    cl, ids, _ = _cluster(start=False)
+    assert not cl.started and cl.n_cells == 3
+    cl.remove_cell(ids[1])
+    assert cl.cell_ids() == [ids[0], ids[2]]
+    cl.start(threaded=False)
+    assert cl.started and cl.schedule_version == 1
+    assert cl.cell_ids() == [ids[0], ids[2]]
+    with pytest.raises(RuntimeError, match="already started"):
+        cl.start()
+    cl.stop()
+
+
+def test_start_requires_cells_and_serving_requires_start():
+    cl = SplitInferenceCluster(None, None, profiles.get_profile("nin"))
+    with pytest.raises(RuntimeError, match="add_cell"):
+        cl.start()
+    cid = cl.add_cell(_scn(0))
+    with pytest.raises(RuntimeError, match="start"):
+        cl.submit(cid, 0, 0.3)
+
+
+def test_add_cell_solves_only_joiner_and_carries_survivors():
+    cl, ids, _ = _cluster()
+    ss0 = cl.engine.current_schedules()
+    outs0 = {c: cl.last_outcome(c) for c in ids}
+    new = cl.add_cell(_scn(10), q0=0.3)
+    ss1 = cl.engine.current_schedules()
+    # one versioned install; survivors' installed Schedule OBJECTS carried
+    assert ss1.version == ss0.version + 1
+    for lane in range(3):
+        assert ss1.schedules[lane] is ss0.schedules[lane]
+    # survivors' warm-start outcomes untouched (no re-solve)
+    for c in ids:
+        assert cl.last_outcome(c) is outs0[c]
+    # the joiner got a real schedule + outcome + q row
+    assert cl.last_outcome(new) is not None
+    assert np.allclose(cl.posted_q(new), 0.3)
+    assert cl.installed_schedule(new) is ss1.schedules[3]
+    cl.stop()
+
+
+def test_remove_cell_remaps_without_solving():
+    cl, (a, b, c), _ = _cluster()
+    ss0 = cl.engine.current_schedules()
+    out_b, out_c = cl.last_outcome(b), cl.last_outcome(c)
+    ref_b, ref_c = cl.drift_reference(b), cl.drift_reference(c)
+    cl.remove_cell(a)
+    assert cl.cell_ids() == [b, c]
+    assert cl.lane_of(b) == 0 and cl.lane_of(c) == 1
+    ss1 = cl.engine.current_schedules()
+    assert ss1.version == ss0.version + 1
+    assert ss1.schedules[0] is ss0.schedules[1]      # b carried, lane moved
+    assert ss1.schedules[1] is ss0.schedules[2]
+    assert cl.last_outcome(b) is out_b and cl.last_outcome(c) is out_c
+    assert cl.drift_reference(b) is ref_b and cl.drift_reference(c) is ref_c
+    with pytest.raises(KeyError):
+        cl.lane_of(a)
+    with pytest.raises(KeyError):
+        cl.submit(a, 0, 0.3)
+    cl.stop()
+
+
+def test_cannot_remove_last_cell():
+    cl, ids, _ = _cluster(n=1)
+    with pytest.raises(ValueError, match="last cell"):
+        cl.remove_cell(ids[0])
+    cl.stop()
+
+
+# ---------------------------------------- drift references across churn
+def test_drift_reference_follows_remap():
+    """The latent positional bug this PR fixes: after a remove, a
+    surviving cell's drift must still be measured against ITS OWN solved
+    snapshot, not whatever scenario now occupies its old lane."""
+    cl, (a, b, c), clock = _cluster()
+    drifted = network.evolve_scenario(_scn(2), jax.random.PRNGKey(99),
+                                      rho=0.6)
+    d_before = cl.observe(c, drifted)
+    cl.remove_cell(a)
+    d_after = cl.observe(c, drifted)
+    assert d_after == pytest.approx(d_before, rel=1e-6)
+    # and a re-solve resets c's reference to the snapshot it solved on
+    clock.advance(1.0)
+    rnd = cl.step()
+    assert rnd is not None and cl.lane_of(c) in rnd.cells
+    assert cl.drift_reference(c) is drifted
+    assert cl.observe(c, drifted) == 0.0
+    cl.stop()
+
+
+def test_queued_work_follows_remap():
+    cl, (a, b, c), clock = _cluster()
+    cl.submit(a, 0, 0.11)              # queued for the cell being removed
+    cl.submit(c, 4, 0.22)              # queued for a surviving cell
+    cl.remove_cell(a)
+    clock.advance(1.0)
+    rnd = cl.step()
+    # a's arrival dropped with the cell; c's followed its lane shift
+    assert rnd.cells == (cl.lane_of(c),)
+    assert rnd.n_arrivals == 1
+    assert cl.posted_q(c)[4] == pytest.approx(0.22)
+    cl.stop()
+
+
+def test_aged_thresholds_survive_churn():
+    cl, (a, b, c), clock = _cluster(qoe_half_life_s=10.0, q_age_cap=2.0)
+    clock.advance(0.5)
+    cl.submit(b, 2, 0.1)               # posted at t=0.5
+    cl.step()
+    clock.advance(10.0)                # one half-life idle
+    aged_before = cl.effective_q(b)
+    cl.remove_cell(a)
+    aged_after = cl.effective_q(b)     # same cell, new lane
+    np.testing.assert_allclose(aged_after, aged_before)
+    assert aged_after[2] == pytest.approx(0.2, rel=1e-3)
+    cl.stop()
+
+
+def test_serve_round_keyed_by_cell_id():
+    """serve_round takes/returns CellId-keyed maps; lane order is an
+    internal detail (checked via each cell's installed schedule)."""
+    cl, ids, _ = _cluster()
+    with pytest.raises(ValueError, match="missing tokens"):
+        cl.serve_round({ids[0]: None})
+    cl.stop()
+
+
+# -------------------------------------------------- property-based churn
+def _apply_churn_ops(ops):
+    """Apply an op interleaving against a live cluster AND a CellId-keyed
+    model, asserting after every op that surviving cells' posted
+    thresholds match the model and that untouched survivors keep their
+    warm-start outcome and drift reference OBJECTS.  Ops:
+      ("add", _) ("remove", i) ("submit", i, user, q) ("observe", i, seed)
+      ("step",) — cell choices index into the live id list modulo its
+    length, so every generated sequence is valid."""
+    cl, ids, clock = _cluster(n=2)
+    model = {c: {"q": np.full(N_USERS, 0.4, np.float32)} for c in ids}
+    queued = {}                          # id -> [(user, q_s)] not yet drained
+    dirty = set()                        # ids past the drift threshold
+    seed = 100
+    try:
+        for op in ops:
+            clock.advance(1.0)
+            live = cl.cell_ids()
+            outs = {c: cl.last_outcome(c) for c in live}
+            refs = {c: cl.drift_reference(c) for c in live}
+            touched = set()
+            if op[0] == "add":
+                seed += 1
+                cid = cl.add_cell(_scn(seed), q0=0.4)
+                model[cid] = {"q": np.full(N_USERS, 0.4, np.float32)}
+                touched = {cid}
+            elif op[0] == "remove":
+                if len(live) <= 1:
+                    continue
+                victim = live[op[1] % len(live)]
+                cl.remove_cell(victim)
+                del model[victim]
+                queued.pop(victim, None)   # its queued arrivals drop too
+                dirty.discard(victim)
+            elif op[0] == "submit":
+                cid = live[op[1] % len(live)]
+                cl.submit(cid, op[2], op[3])
+                # posted thresholds land in controller state when the
+                # arrival is DRAINED (step), not at submit — model likewise
+                queued.setdefault(cid, []).append((op[2], op[3]))
+            elif op[0] == "observe":
+                cid = live[op[1] % len(live)]
+                drifted = network.evolve_scenario(
+                    cl.drift_reference(cid),
+                    jax.random.PRNGKey(op[2]), rho=0.3)
+                if cl.observe(cid, drifted) > cl.drift_threshold:
+                    dirty.add(cid)
+            elif op[0] == "step":
+                rnd = cl.step()
+                if rnd is not None:
+                    touched = {c for c in cl.cell_ids()
+                               if cl.lane_of(c) in rnd.cells}
+                    assert touched == set(queued) | dirty
+                    for cid, posts in queued.items():
+                        for user, q_s in posts:   # drained in order
+                            model[cid]["q"][user] = q_s
+                    queued, dirty = {}, set()
+
+            # --- invariants over every surviving cell -------------------
+            assert set(cl.cell_ids()) == set(model)
+            for c in cl.cell_ids():
+                np.testing.assert_array_equal(
+                    cl.posted_q(c), model[c]["q"],
+                    err_msg=f"posted thresholds drifted for {c}")
+                if c in touched or c not in outs:
+                    continue
+                # untouched survivors: warm-start allocation and drift
+                # reference are the SAME OBJECTS as before the op
+                assert cl.last_outcome(c) is outs[c], \
+                    f"warm-start outcome replaced for {c}"
+                assert cl.drift_reference(c) is refs[c], \
+                    f"drift reference moved for {c}"
+    finally:
+        cl.stop(drain=False)
+
+
+@pytest.mark.slow
+def test_churn_interleavings_preserve_survivor_state():
+    """Hypothesis drives arbitrary add/remove/submit/observe/step
+    interleavings through ``_apply_churn_ops``'s invariants."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("add"), st.integers(0, 7)),
+            st.tuples(st.just("remove"), st.integers(0, 7)),
+            st.tuples(st.just("submit"), st.integers(0, 7),
+                      st.integers(0, N_USERS - 1),
+                      st.floats(0.05, 1.0, allow_nan=False)),
+            st.tuples(st.just("observe"), st.integers(0, 7),
+                      st.integers(1, 1000)),
+            st.tuples(st.just("step"),),
+        ),
+        min_size=1, max_size=7)
+
+    @hyp.settings(max_examples=12, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(ops=ops)
+    def run(ops):
+        _apply_churn_ops(ops)
+
+    run()
+
+
+@pytest.mark.slow
+def test_churn_interleavings_seeded():
+    """Deterministic fallback for the hypothesis property test (the dep is
+    optional): seeded random interleavings through the same invariants, so
+    the churn contract is exercised even without hypothesis."""
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        ops = []
+        for _ in range(int(rng.integers(3, 8))):
+            kind = rng.choice(["add", "remove", "submit", "observe",
+                               "step"])
+            if kind == "add":
+                ops.append(("add", int(rng.integers(8))))
+            elif kind == "remove":
+                ops.append(("remove", int(rng.integers(8))))
+            elif kind == "submit":
+                ops.append(("submit", int(rng.integers(8)),
+                            int(rng.integers(N_USERS)),
+                            float(rng.uniform(0.05, 1.0))))
+            elif kind == "observe":
+                ops.append(("observe", int(rng.integers(8)),
+                            int(rng.integers(1, 1000))))
+            else:
+                ops.append(("step",))
+        _apply_churn_ops(ops)
+
+
+# ------------------------------------------------------- spec plumbing
+def test_cluster_bucket_full_disables_partial_rounds():
+    spec = SolverSpec(max_steps=5, tol=0.0, bucket="full")
+    cl, ids, clock = _cluster(spec=spec)
+    assert cl.controller.partial_batch is False
+    cl.submit(ids[0], 0, 0.2)
+    clock.advance(1.0)
+    rnd = cl.step()
+    # full policy: only the touched cell's schedule swaps, but the solve
+    # covered every lane (total_iters counts all B lanes)
+    assert rnd.cells == (cl.lane_of(ids[0]),)
+    cl.stop()
+
+
+def test_add_cell_solves_one_lane_even_under_full_bucket(monkeypatch):
+    """A join must pay a 1-lane solve, not a B-wide batch of duplicated
+    joiner lanes, even when the admission policy is bucket='full'."""
+    from repro.core import ligd as ligd_mod
+    spec = SolverSpec(max_steps=5, tol=0.0, bucket="full")
+    cl, ids, _ = _cluster(spec=spec)
+    solved_lane_counts = []
+    orig = ligd_mod.solve_batch
+
+    def spy(*args, **kw):
+        outs = orig(*args, **kw)
+        solved_lane_counts.append(len(outs))
+        return outs
+
+    monkeypatch.setattr(ligd_mod, "solve_batch", spy)
+    cl.add_cell(_scn(30))
+    assert solved_lane_counts == [1]
+    cl.stop()
+
+
+def test_per_cell_profiles_churn():
+    """Clusters over per-cell profile lists: remove works, add requires
+    (and accepts) the joiner's profile."""
+    from repro.core import profiles as P
+    prof = [P.get_profile("nin")] * 3
+    spec = SolverSpec(max_steps=5, tol=0.0)
+    clock = FakeClock()
+    cl = SplitInferenceCluster(None, None, prof, spec=spec, clock=clock,
+                               default_q_s=0.4)
+    ids = [cl.add_cell(_scn(s)) for s in range(3)]
+    cl.start(threaded=False)
+    with pytest.raises(ValueError, match="prof="):
+        cl.add_cell(_scn(40))                    # joiner profile missing
+    new = cl.add_cell(_scn(40), prof=P.get_profile("nin"))
+    assert cl.last_outcome(new) is not None
+    cl.remove_cell(ids[0])
+    assert cl.cell_ids() == [ids[1], ids[2], new]
+    cl.stop()
+
+
+def test_cluster_spec_warm_false_propagates():
+    spec = SolverSpec(max_steps=5, tol=0.0, warm=False)
+    cl, ids, _ = _cluster(spec=spec)
+    assert cl.controller.warm_start is False
+    cl.stop()
+
+
+def test_removed_then_readded_ids_are_never_reused():
+    cl, ids, _ = _cluster()
+    cl.remove_cell(ids[0])
+    new = cl.add_cell(_scn(20))
+    assert new not in ids
+    cl.stop()

@@ -1,0 +1,221 @@
+"""SolverSpec: validation, the legacy-kwarg deprecation shims, and their
+bitwise equivalence to the spec route (same compiled programs, so results
+must be identical to the bit, not just close)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ligd, network, profiles
+from repro.core.ligd import SolverSpec
+from repro.serving.scheduler import EraScheduler, MultiCellScheduler
+
+pytestmark = pytest.mark.cluster
+
+
+def _scns(n=2, n_users=6, n_subchannels=3):
+    cfg = network.small_config(n_users=n_users, n_subchannels=n_subchannels)
+    return [network.make_scenario(jax.random.PRNGKey(s), cfg)
+            for s in range(n)]
+
+
+def _outcomes_equal(a, b):
+    assert np.array_equal(a.s, b.s)
+    assert np.array_equal(a.gamma_by_layer, b.gamma_by_layer)
+    assert np.array_equal(a.iters_by_layer, b.iters_by_layer)
+    for x, y in zip(a.alloc, b.alloc):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ validation
+def test_spec_rejects_unknown_backend_and_bucket():
+    with pytest.raises(ValueError, match="backend"):
+        SolverSpec(backend="bogus")
+    with pytest.raises(ValueError, match="bucket"):
+        SolverSpec(bucket="bogus")
+
+
+def test_spec_reference_rejects_gd_chunk():
+    with pytest.raises(ValueError, match="chunked"):
+        SolverSpec(gd_chunk=4)
+
+
+def test_spec_chunked_defaults_gd_chunk():
+    assert SolverSpec(backend="chunked").gd_chunk == ligd.DEFAULT_GD_CHUNK
+    assert SolverSpec(backend="chunked", gd_chunk=3).gd_chunk == 3
+
+
+def test_spec_mesh_requires_sharded():
+    mesh = jax.make_mesh((1,), ("cells",))
+    with pytest.raises(ValueError, match="sharded"):
+        SolverSpec(mesh=mesh)
+    assert SolverSpec(backend="sharded", mesh=mesh).mesh is mesh
+
+
+def test_spec_numeric_bounds():
+    for bad in (dict(lr=0.0), dict(tol=-1.0), dict(max_steps=0),
+                dict(gd_chunk=-1)):
+        with pytest.raises(ValueError):
+            SolverSpec(**bad)
+
+
+def test_spec_sequential_loop_only_on_reference():
+    with pytest.raises(ValueError, match="compiled_sweep"):
+        SolverSpec(backend="chunked", compiled_sweep=False)
+
+
+def test_spec_replace_revalidates():
+    spec = SolverSpec(max_steps=7)
+    assert spec.replace(lr=0.1).max_steps == 7
+    with pytest.raises(ValueError):
+        spec.replace(backend="nope")
+
+
+def test_spec_is_frozen_and_hashable():
+    spec = SolverSpec()
+    with pytest.raises(Exception):
+        spec.lr = 0.1
+    assert hash(spec) == hash(SolverSpec())
+    assert spec == SolverSpec()
+
+
+def test_spec_from_kwargs_backend_mapping():
+    assert ligd.spec_from_kwargs().backend == "reference"
+    assert ligd.spec_from_kwargs(gd_chunk=4).backend == "chunked"
+    mesh = jax.make_mesh((1,), ("cells",))
+    sp = ligd.spec_from_kwargs(gd_chunk=4, mesh=mesh)
+    assert sp.backend == "sharded" and sp.gd_chunk == 4 and sp.mesh is mesh
+
+
+# ------------------------------------------------- deprecation shims
+def test_solve_batch_legacy_gd_chunk_warns_and_matches():
+    scns = _scns()
+    prof = profiles.get_profile("nin")
+    qs = jnp.full((2, 6), 0.4)
+    with pytest.warns(DeprecationWarning, match="gd_chunk"):
+        legacy = ligd.solve_batch(scns, prof, qs, max_steps=5, tol=0.0,
+                                  gd_chunk=4)
+    spec = SolverSpec(backend="chunked", gd_chunk=4, max_steps=5, tol=0.0)
+    via_spec = ligd.solve_batch(scns, prof, qs, spec=spec)
+    for a, b in zip(legacy, via_spec):
+        _outcomes_equal(a, b)
+
+
+def test_solve_batch_legacy_mesh_warns_and_matches():
+    scns = _scns()
+    prof = profiles.get_profile("nin")
+    qs = jnp.full((2, 6), 0.4)
+    mesh = jax.make_mesh((1,), ("cells",))
+    with pytest.warns(DeprecationWarning, match="mesh"):
+        legacy = ligd.solve_batch(scns, prof, qs, max_steps=5, tol=0.0,
+                                  mesh=mesh)
+    spec = SolverSpec(backend="sharded", mesh=mesh, max_steps=5, tol=0.0)
+    via_spec = ligd.solve_batch(scns, prof, qs, spec=spec)
+    for a, b in zip(legacy, via_spec):
+        _outcomes_equal(a, b)
+
+
+def test_solve_legacy_compiled_sweep_warns_and_matches():
+    (scn,) = _scns(1)
+    prof = profiles.get_profile("nin")
+    q = jnp.full((6,), 0.4)
+    with pytest.warns(DeprecationWarning, match="compiled_sweep"):
+        legacy = ligd.solve(scn, prof, q, max_steps=5, tol=0.0,
+                            compiled_sweep=False)
+    spec = SolverSpec(compiled_sweep=False, max_steps=5, tol=0.0)
+    _outcomes_equal(legacy, ligd.solve(scn, prof, q, spec=spec))
+
+
+def test_vacuous_legacy_values_do_not_warn():
+    (scn,) = _scns(1)
+    prof = profiles.get_profile("nin")
+    q = jnp.full((6,), 0.4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ligd.solve(scn, prof, q, max_steps=5, tol=0.0,
+                   compiled_sweep=True, gd_chunk=0)
+
+
+def test_spec_and_legacy_kwargs_are_mutually_exclusive():
+    scns = _scns()
+    prof = profiles.get_profile("nin")
+    qs = jnp.full((2, 6), 0.4)
+    with pytest.raises(ValueError, match="not both"):
+        ligd.solve_batch(scns, prof, qs, spec=SolverSpec(), max_steps=5)
+    with pytest.raises(ValueError, match="not both"):
+        ligd.solve(scns[0], prof, qs[0], spec=SolverSpec(), gd_chunk=2)
+
+
+def test_solve_batch_rejects_sequential_loop():
+    """compiled_sweep=False is a single-cell path; solve_batch must refuse
+    it loudly rather than warn and silently run the scanned sweep."""
+    scns = _scns()
+    prof = profiles.get_profile("nin")
+    qs = jnp.full((2, 6), 0.4)
+    with pytest.raises(ValueError, match="solve_batch"), \
+            pytest.warns(DeprecationWarning, match="compiled_sweep"):
+        ligd.solve_batch(scns, prof, qs, max_steps=5, compiled_sweep=False)
+    with pytest.raises(ValueError, match="solve_batch"):
+        ligd.solve_batch(scns, prof, qs,
+                         spec=SolverSpec(compiled_sweep=False, max_steps=5))
+
+
+def test_solve_rejects_sharded_backend():
+    (scn,) = _scns(1)
+    prof = profiles.get_profile("nin")
+    with pytest.raises(ValueError, match="solve_batch"):
+        ligd.solve(scn, prof, jnp.full((6,), 0.4),
+                   spec=SolverSpec(backend="sharded"))
+
+
+# ------------------------------------------------- scheduler constructors
+def test_multicell_scheduler_legacy_kwargs_fold_into_spec():
+    scns = _scns()
+    prof = profiles.get_profile("nin")
+    ms = MultiCellScheduler(scns, prof, per_user_split=False, max_steps=5,
+                            tol=0.0, gd_chunk=4)
+    assert ms.spec.backend == "chunked"
+    assert ms.spec.gd_chunk == 4
+    assert ms.spec.max_steps == 5
+    assert not ms.spec.per_user_split
+    via_spec = MultiCellScheduler(
+        scns, prof, spec=SolverSpec(backend="chunked", gd_chunk=4,
+                                    max_steps=5, tol=0.0))
+    q = np.full((2, 6), 0.4, np.float32)
+    for a, b in zip(ms.schedule(q), via_spec.schedule(q)):
+        assert np.array_equal(a.split, b.split)
+        assert np.array_equal(a.power_up, b.power_up)
+        assert a.gamma == b.gamma
+
+
+def test_scheduler_ctors_reject_spec_plus_legacy_mix():
+    scns = _scns()
+    prof = profiles.get_profile("nin")
+    with pytest.raises(ValueError, match="not both"):
+        MultiCellScheduler(scns, prof, spec=SolverSpec(), max_steps=50)
+    with pytest.raises(ValueError, match="not both"):
+        EraScheduler(scns[0], prof, spec=SolverSpec(), lr=0.01)
+
+
+def test_engine_resize_requires_schedules_or_keep():
+    from repro.serving.engine import MultiCellServeEngine
+    scns = _scns()
+    prof = profiles.get_profile("nin")
+    ms = MultiCellScheduler(scns, prof, spec=SolverSpec(max_steps=2))
+    engine = MultiCellServeEngine(None, None, scns, ms)
+    with pytest.raises(ValueError, match="keep"):
+        engine.resize(scns)
+
+
+def test_era_scheduler_spec_equivalence():
+    (scn,) = _scns(1)
+    prof = profiles.get_profile("nin")
+    q = np.full(6, 0.4, np.float32)
+    legacy = EraScheduler(scn, prof, per_user_split=False,
+                          max_steps=5, tol=0.0).schedule(q)
+    spec = SolverSpec(per_user_split=False, max_steps=5, tol=0.0)
+    via_spec = EraScheduler(scn, prof, spec=spec).schedule(q)
+    assert np.array_equal(legacy.split, via_spec.split)
+    assert legacy.gamma == via_spec.gamma
