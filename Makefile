@@ -5,11 +5,14 @@
 # suites (ligd core / batched sweep / sharded SPMD) and forces 4 host
 # devices so the shard_map multi-device paths are exercised on CPU-only CI.
 # `make test-cluster` runs the unified cluster API suite (SolverSpec +
-# SplitInferenceCluster churn lifecycle).
+# SplitInferenceCluster churn lifecycle).  `make test-kernels` runs every
+# Pallas kernel suite (kernels marker) in interpret mode, under 4 forced
+# host devices so the fused-step sharded regressions see a real SPMD split.
 PY := PYTHONPATH=src python
 SOLVER_DEVICES := XLA_FLAGS="--xla_force_host_platform_device_count=4"
 
-.PHONY: test test-fast test-serving test-solver test-cluster bench bench-quick
+.PHONY: test test-fast test-serving test-solver test-cluster test-kernels \
+	bench bench-quick
 
 test:
 	$(PY) -m pytest -q
@@ -29,8 +32,11 @@ test-cluster:
 	$(PY) -m pytest -q -m cluster tests/test_solver_spec.py \
 		tests/test_cluster.py
 
+test-kernels:
+	$(SOLVER_DEVICES) $(PY) -m pytest -q -m kernels
+
 bench:
 	$(PY) -m benchmarks.run
 
 bench-quick:
-	$(PY) -m benchmarks.run --quick
+	$(PY) -m benchmarks.run --quick --json-dir .

@@ -27,6 +27,7 @@ MODULES = [
     ("sharded", "benchmarks.sharded_solver"),
     ("eraplus", "benchmarks.era_plus"),
     ("kernels", "benchmarks.kernel_bench"),
+    ("era_step", "benchmarks.era_step"),
     ("multipod", "benchmarks.multipod_scaling"),
     ("online", "benchmarks.online_rescheduling"),
     ("admission", "benchmarks.async_admission"),
@@ -49,17 +50,22 @@ def git_sha() -> str:
 def write_json(tag: str, modname: str, records, *, quick: bool,
                elapsed_s: float, json_dir: str) -> str:
     import jax
+
+    from repro.launch import platform as _platform
+    # the EFFECTIVE environment (preset name, XLA_FLAGS as jax saw them,
+    # forced host device count, allocator preload) — without it, numbers
+    # measured under `make bench` and under an ad-hoc shell with
+    # XLA_FLAGS exported look like the same run and diff as regressions
+    config = {
+        "quick": quick,
+        "jax_version": jax.__version__,
+    }
+    config.update(_platform.describe())
     payload = {
         "benchmark": tag,
         "module": modname,
         "git_sha": git_sha(),
-        "config": {
-            "quick": quick,
-            "n_devices": len(jax.devices()),
-            "platform": jax.devices()[0].platform,
-            "jax_version": jax.__version__,
-            "xla_flags": os.environ.get("XLA_FLAGS", ""),
-        },
+        "config": config,
         "elapsed_s": round(elapsed_s, 3),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "records": list(records),

@@ -105,6 +105,8 @@ from repro.core.era import (Allocation, Terms, Weights, clip_alloc,
 
 _BACKENDS = ("reference", "chunked", "sharded")
 _BUCKETS = ("pow2", "exact", "full")
+_STEP_IMPLS = ("xla", "fused")
+_PLACEMENTS = ("none", "sorted")
 
 # gd_chunk a `backend="chunked"` spec defaults to when none is given —
 # long enough that XLA fuses across GD steps, short enough that wasted
@@ -150,6 +152,17 @@ class SolverSpec:
                       subset size), 'full' (always solve all B lanes).
       mesh            explicit ``jax.Mesh`` for 'sharded' (None = build a
                       ``cells`` mesh over every visible device at use).
+      step_impl       'xla' (autodiff value_and_grad — the reference) |
+                      'fused' (the one-launch fused forward+backward GD
+                      step, kernels/era_step: Pallas kernel on TPU, the
+                      analytic jnp oracle elsewhere).  Composes with every
+                      backend; jit-static of the sweep.
+      lane_placement  'none' | 'sorted' — 'sorted' permutes lanes by the
+                      previous same-size round's total iteration counts
+                      before the sharded ``shard_map`` (hardest lanes
+                      dealt round-robin across shards) and inverts the
+                      permutation on output; outcomes are exactly the
+                      'none' ordering's.  'sharded' backend only.
     """
     backend: str = "reference"
     gd_chunk: int = 0
@@ -163,6 +176,8 @@ class SolverSpec:
     compiled_sweep: bool = True
     bucket: str = "pow2"
     mesh: Optional[object] = None          # jax.sharding.Mesh (hashable)
+    step_impl: str = "xla"
+    lane_placement: str = "none"
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
@@ -183,6 +198,16 @@ class SolverSpec:
         if not self.compiled_sweep and self.backend != "reference":
             raise ValueError("compiled_sweep=False (per-layer reference "
                              "loop) only composes with backend='reference'")
+        if self.step_impl not in _STEP_IMPLS:
+            raise ValueError(f"step_impl must be one of {_STEP_IMPLS}, "
+                             f"got {self.step_impl!r}")
+        if self.lane_placement not in _PLACEMENTS:
+            raise ValueError(f"lane_placement must be one of {_PLACEMENTS},"
+                             f" got {self.lane_placement!r}")
+        if self.lane_placement == "sorted" and self.backend != "sharded":
+            raise ValueError("lane_placement='sorted' permutes lanes "
+                             "across mesh shards — it only applies to "
+                             "backend='sharded'")
         if not self.lr > 0:
             raise ValueError(f"lr must be > 0, got {self.lr}")
         if self.tol < 0:
@@ -287,7 +312,7 @@ def _scales(env):
 
 
 def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-             adaptive=False, gd_chunk=0):
+             adaptive=False, gd_chunk=0, step_impl="xla", step_aux=None):
     """Projected, preconditioned GD on Γ — pure traced function, shared by
     the per-layer jitted path and the scan-compiled sweep.
 
@@ -307,12 +332,29 @@ def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
     the outer loop exits as soon as EVERY lane in the (local) batch is
     done.  Wasted work per lane is bounded by ``k - 1`` selected-away
     steps, and under the cell-sharded mesh each device's outer loop exits
-    on its own lanes, not the global slowest cell."""
+    on its own lanes, not the global slowest cell.
+
+    ``step_impl='fused'`` swaps the autodiff ``value_and_grad`` body for
+    the one-launch fused forward+backward step (kernels/era_step — Pallas
+    kernel on TPU, analytic jnp oracle elsewhere); the final Γ evaluation
+    and the adaptive path's extra forward stay on the XLA ``loss``, so
+    reported gammas are computed identically under both impls.
+    ``step_aux``: a precomputed ``era_step.ops.build_aux(scn)`` — the
+    scanned sweep hoists it out of the layer loop; None builds it here."""
 
     def loss(alloc):
         return utility(scn, prof, s_vec, alloc, q, w).gamma
 
-    grad_fn = jax.value_and_grad(loss)
+    if step_impl == "fused":
+        from repro.kernels.era_step import ops as _era_step_ops
+        aux = (step_aux if step_aux is not None
+               else _era_step_ops.build_aux(scn))
+
+        def grad_fn(alloc):
+            return _era_step_ops.era_step_value_and_grad(
+                scn, prof, s_vec, q, alloc, w, aux=aux)
+    else:
+        grad_fn = jax.value_and_grad(loss)
     scales = _scales(scn.env)
 
     def cond(carry):
@@ -381,7 +423,8 @@ def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
 # Scenario/SplitProfile are registered pytrees, Weights is static, so one
 # compilation serves every layer's solve.
 _gd_solve = partial(jax.jit, static_argnames=("max_steps", "w", "adaptive",
-                                              "gd_chunk"))(_gd_core)
+                                              "gd_chunk", "step_impl"))(
+    _gd_core)
 
 
 def warm_start_predecessors(uplink_bits, warm_start: bool = True
@@ -406,7 +449,7 @@ def warm_start_predecessors(uplink_bits, warm_start: bool = True
 
 
 def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
-                adaptive=False, gd_chunk=0):
+                adaptive=False, gd_chunk=0, step_impl="xla"):
     """The whole F+1 split sweep as one ``lax.scan`` (tentpole path).
 
     Carry = a stacked Allocation buffer with leading axis F+1, initialised
@@ -414,18 +457,28 @@ def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
     gather — always an already-written slot or the uninformed start, see
     ``warm_start_predecessors``), runs GD, and writes slot s.  F is static
     (``pred``'s shape), so XLA sees a single fused program with no host
-    round-trips between layers."""
+    round-trips between layers.
+
+    ``step_impl='fused'``: the fused step's allocation-independent operand
+    pack (SIC permutations, transposed gains — ``era_step.ops.build_aux``)
+    is hoisted here, outside the layer scan AND the GD loop, so it is
+    assembled once per sweep rather than once per step."""
     n_s = pred.shape[0]                    # F+1 (static)
     u = q.shape[0]
     buf0 = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_s,) + x.shape), x_init)
+    step_aux = None
+    if step_impl == "fused":
+        from repro.kernels.era_step import ops as _era_step_ops
+        step_aux = _era_step_ops.build_aux(scn)
 
     def body(buf, xs):
         s, p_idx = xs
         x0 = jax.tree.map(lambda b: b[p_idx], buf)
         s_vec = jnp.full((u,), s, jnp.int32)
         res = _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-                       adaptive=adaptive, gd_chunk=gd_chunk)
+                       adaptive=adaptive, gd_chunk=gd_chunk,
+                       step_impl=step_impl, step_aux=step_aux)
         buf = jax.tree.map(lambda b, a: b.at[s].set(a), buf, res.alloc)
         return buf, res
 
@@ -435,13 +488,14 @@ def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
 
 
 _sweep_scan = partial(jax.jit, static_argnames=("max_steps", "w",
-                                                "adaptive", "gd_chunk"))(
+                                                "adaptive", "gd_chunk",
+                                                "step_impl"))(
     _sweep_core)
 
 
 def _vmapped_sweep(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
-                   adaptive=False, gd_chunk=0, prof_batched=False,
-                   x_init_batched=False):
+                   adaptive=False, gd_chunk=0, step_impl="xla",
+                   prof_batched=False, x_init_batched=False):
     """Unjitted vmap of the scanned sweep over a leading cell axis — the
     single shared definition of the batched sweep body.  Jitted directly
     as ``_sweep_batch`` (one device) and wrapped in ``shard_map`` by
@@ -456,14 +510,14 @@ def _vmapped_sweep(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
     return jax.vmap(
         lambda scn, q, x0, pred, prf: _sweep_core(
             scn, q, x0, pred, lr, tol, max_steps, w, prf,
-            adaptive=adaptive, gd_chunk=gd_chunk),
+            adaptive=adaptive, gd_chunk=gd_chunk, step_impl=step_impl),
         in_axes=(0, 0, 0 if x_init_batched else None, 0,
                  0 if prof_batched else None),
     )(scn_b, q_b, x_init, pred_b, prof)
 
 
 _sweep_batch = partial(jax.jit, static_argnames=(
-    "max_steps", "w", "adaptive", "gd_chunk", "prof_batched",
+    "max_steps", "w", "adaptive", "gd_chunk", "step_impl", "prof_batched",
     "x_init_batched"))(_vmapped_sweep)
 
 
@@ -559,7 +613,8 @@ def _discretize_eval_batch(scn_b, s_user_b, hard_b, q_b, w, prof, f,
 
 
 def _finalize(scn, prof, q, w, stacked, gammas_np, iters_np, *, lr, tol,
-              max_steps, adaptive, per_user_split) -> LiGDOutcome:
+              max_steps, adaptive, per_user_split,
+              step_impl="xla") -> LiGDOutcome:
     """Shared post-sweep discretisation: s* pick (+ optional ERA+ per-user
     split & polish), β rounding, SIC fallback, final Γ evaluation.
 
@@ -577,7 +632,8 @@ def _finalize(scn, prof, q, w, stacked, gammas_np, iters_np, *, lr, tol,
         s_user = jnp.argmin(costs, axis=0).astype(jnp.int32)
         # polish the allocation for the mixed split vector
         res = _gd_solve(scn, s_user, q, alloc_at(s_star), lr, tol,
-                        max_steps, w, prof, adaptive=adaptive)
+                        max_steps, w, prof, adaptive=adaptive,
+                        step_impl=step_impl)
         alloc = res.alloc
     else:
         s_user = jnp.full((u,), s_star, jnp.int32)
@@ -631,21 +687,24 @@ def solve(scn, prof, q, w: Weights = Weights(), *, spec: SolverSpec = None,
                                  max_steps=spec.max_steps,
                                  warm_start=spec.warm_start,
                                  per_user_split=spec.per_user_split,
-                                 adaptive=spec.adaptive, x_init=x_init)
+                                 adaptive=spec.adaptive, x_init=x_init,
+                                 step_impl=spec.step_impl)
 
     pred = warm_start_predecessors(prof.uplink_bits, spec.warm_start)
     swept = _sweep_scan(scn, q, x_init, jnp.asarray(pred), spec.lr, spec.tol,
                         spec.max_steps, w, prof, adaptive=spec.adaptive,
-                        gd_chunk=spec.gd_chunk)
+                        gd_chunk=spec.gd_chunk, step_impl=spec.step_impl)
     return _finalize(scn, prof, q, w, swept.alloc,
                      np.asarray(swept.gamma), np.asarray(swept.iters),
                      lr=spec.lr, tol=spec.tol, max_steps=spec.max_steps,
                      adaptive=spec.adaptive,
-                     per_user_split=spec.per_user_split)
+                     per_user_split=spec.per_user_split,
+                     step_impl=spec.step_impl)
 
 
 def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
-                      per_user_split, adaptive, x_init) -> LiGDOutcome:
+                      per_user_split, adaptive, x_init,
+                      step_impl="xla") -> LiGDOutcome:
     """The seed-structured reference the compiled sweep is validated and
     benchmarked against: one jitted GD per layer with a NumPy round-trip in
     between, an eager per-user cost stack for ERA+, and eager
@@ -662,7 +721,7 @@ def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
         x0 = solved_alloc[pred[s]] if pred[s] < s else x_init
         s_vec = jnp.full((u,), s, jnp.int32)
         res = _gd_solve(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-                        adaptive=adaptive)
+                        adaptive=adaptive, step_impl=step_impl)
         solved_alloc.append(res.alloc)
         gammas.append(float(res.gamma))      # host sync per layer
         iters.append(int(res.iters))
@@ -680,7 +739,8 @@ def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
         s_user = jnp.asarray(np.argmin(costs, axis=0), jnp.int32)
         # polish the allocation for the mixed split vector
         res = _gd_solve(scn, s_user, q, solved_alloc[s_star], lr, tol,
-                        max_steps, w, prof, adaptive=adaptive)
+                        max_steps, w, prof, adaptive=adaptive,
+                        step_impl=step_impl)
         alloc = res.alloc
     else:
         s_user = jnp.full((u,), s_star, jnp.int32)
@@ -700,6 +760,44 @@ def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
         iters_by_layer=np.asarray(iters),
         total_iters=int(np.sum(iters)),
     )
+
+
+# lane_placement='sorted' history: padded-batch-size -> (B,) per-lane total
+# GD iteration counts of the most recent sharded solve at that size.
+# Host-side and advisory only — the permutation it induces is inverted on
+# every output, so placement never changes WHAT a solve returns, only which
+# shard works hardest.  Keyed by lane count so bucketed partial rounds
+# (1/2/4/… ladders) never mix histories across batch shapes.
+_LANE_ITERS: dict = {}
+
+
+def reset_lane_history():
+    """Drop the lane_placement='sorted' iteration history (call on cell
+    churn — lane indices change meaning — or between unrelated tests)."""
+    _LANE_ITERS.clear()
+
+
+def _lane_permutation(n_lanes: int, n_shards: int):
+    """Slot->lane permutation for ``lane_placement='sorted'``, or None when
+    there is nothing to sort (no history at this size, or a 1-shard mesh).
+
+    Lanes are ranked by the previous same-size round's total iteration
+    count and dealt round-robin across the mesh's contiguous shard blocks —
+    hardest lane to shard 0, next to shard 1, … — so no shard ends up with
+    all the slow cells while others idle at the lockstep barrier.  Returns
+    ``perm`` with ``permuted[k] = original[perm[k]]``; callers invert with
+    ``np.argsort(perm)``."""
+    hist = _LANE_ITERS.get(n_lanes)
+    if hist is None or n_shards <= 1 or n_lanes <= 1:
+        return None
+    order = np.argsort(-np.asarray(hist), kind="stable")
+    block = -(-n_lanes // n_shards)              # shard block length (ceil)
+    slots = [s * block + t
+             for t in range(block) for s in range(n_shards)
+             if s * block + t < n_lanes]         # round-robin slot order
+    perm = np.empty(n_lanes, dtype=np.int64)
+    perm[np.asarray(slots)] = order
+    return perm
 
 
 class BatchPrep(NamedTuple):
@@ -842,15 +940,41 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *,
     run_mesh = spec.run_mesh()
     if run_mesh is not None:
         from repro.distributed import solver_mesh
+        lane_perm = None
+        if spec.lane_placement == "sorted":
+            lane_perm = _lane_permutation(n_cells, run_mesh.devices.size)
+        if lane_perm is not None:
+            perm_ix = jnp.asarray(lane_perm)
+            scn_sw = network.take_cells(scn_b, perm_ix)
+            q_sw = jnp.take(q, perm_ix, axis=0)
+            pred_sw = pred_b[lane_perm]
+            x_init_sw = (network.take_cells(x_init, perm_ix)
+                         if x_init_batched else x_init)
+            prof_sw = (network.take_cells(prof_b, perm_ix)
+                       if prof_batched else prof_b)
+        else:
+            scn_sw, q_sw, pred_sw = scn_b, q, pred_b
+            x_init_sw, prof_sw = x_init, prof_b
         swept = solver_mesh.sharded_sweep(
-            run_mesh, scn_b, q, x_init, jnp.asarray(pred_b), spec.lr,
-            spec.tol, spec.max_steps, w, prof_b, adaptive=spec.adaptive,
-            gd_chunk=spec.gd_chunk, prof_batched=prof_batched,
+            run_mesh, scn_sw, q_sw, x_init_sw, jnp.asarray(pred_sw),
+            spec.lr, spec.tol, spec.max_steps, w, prof_sw,
+            adaptive=spec.adaptive, gd_chunk=spec.gd_chunk,
+            step_impl=spec.step_impl, prof_batched=prof_batched,
             x_init_batched=x_init_batched)
+        if lane_perm is not None:
+            # per-lane GD is frozen-by-select under vmap, so a lane's
+            # result is independent of its co-resident lanes — inverting
+            # the permutation restores the 'none' ordering's outputs
+            # exactly (tests/test_sharded_solver.py asserts equality)
+            inv_ix = jnp.asarray(np.argsort(lane_perm))
+            swept = network.take_cells(swept, inv_ix)
+        # record this round's per-lane effort for the next same-size round
+        _LANE_ITERS[n_cells] = np.asarray(swept.iters).sum(axis=1)
     else:
         swept = _sweep_batch(scn_b, q, x_init, jnp.asarray(pred_b), spec.lr,
                              spec.tol, spec.max_steps, w, prof_b,
                              adaptive=spec.adaptive, gd_chunk=spec.gd_chunk,
+                             step_impl=spec.step_impl,
                              prof_batched=prof_batched,
                              x_init_batched=x_init_batched)
 
@@ -876,7 +1000,7 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *,
             _gd_solve(scn_list[b], s_user[b], q[b],
                       jax.tree.map(lambda x, b=b: x[b], x_star),
                       spec.lr, spec.tol, spec.max_steps, w, prof_list[b],
-                      adaptive=spec.adaptive)
+                      adaptive=spec.adaptive, step_impl=spec.step_impl)
             for b in range(n_cells)
         ]
         alloc_b = jax.tree.map(lambda *xs: jnp.stack(xs),

@@ -12,10 +12,20 @@ SIC semantics:
 Subchannel assignment is the relaxed β ∈ [0,1]^{U×M} of the paper
 (Corollary 1); rates are Σ_m β_im · (B/M)·log2(1+SINR_im).
 
-The sorted-cumsum trick: SIC orderings depend only on channel gains, which
-are static per scenario, so ``Scenario`` precomputes per-channel user
-orderings grouped by AP; interference is then an (exclusive) suffix sum over
-the sorted contributions — O(U·M), no U×U pairwise tensor.
+SIC orderings depend only on channel gains, which are static per scenario,
+so ``Scenario`` precomputes per-channel user orderings grouped by AP;
+interference is then a decoded-after suffix sum over the sorted
+contributions.  The suffix is evaluated as a masked matvec rather than a
+cumsum difference (``end_cs - cs``): the subtraction cancels
+catastrophically whenever the in-group suffix is small against the running
+global cumsum, and its ±ulp residue lands on the ``max(·, 0)`` tie
+nondeterministically — the mask sums only the in-group terms, so an empty
+suffix is EXACTLY 0.0 and autodiff's balanced relu tie (0.5) fires
+deterministically.  The fused GD-step kernel (kernels/era_step) evaluates
+the same masked form; numerical consistency between the two is what lets
+its solver regression tests pin rtol=1e-5.  Cost is O(U²·M) against the
+cumsum's O(U·M) — at test scale it is noise, and at paper scale the hot
+path is the fused kernel, where the mask matvec is an MXU dot.
 
 Batch-safety audit (ligd.solve_batch vmaps this module over a leading cell
 axis): every reduction here is over an explicit named axis (cumsum axis=1,
@@ -37,10 +47,14 @@ import jax.numpy as jnp
 def _suffix_interference(contrib_sorted, group_end):
     """contrib_sorted: (M, U) sorted per SIC order. Returns, per position i,
     the sum of contributions of positions (i, group_end[i]] — i.e. same-cell
-    users decoded after i."""
-    cs = jnp.cumsum(contrib_sorted, axis=1)
-    end_cs = jnp.take_along_axis(cs, group_end, axis=1)
-    return end_cs - cs
+    users decoded after i.  Masked matvec, not a cumsum difference — see the
+    module docstring for why (exact empty-suffix ties, no cancellation)."""
+    u = contrib_sorted.shape[-1]
+    idx = jnp.arange(u)
+    same = group_end[..., :, None] == group_end[..., None, :]
+    later = idx[None, :] > idx[:, None]
+    mask = (same & later).astype(contrib_sorted.dtype)
+    return jnp.einsum("...ij,...j->...i", mask, contrib_sorted)
 
 
 def uplink_sinr(scn, beta_up, p):
@@ -56,16 +70,18 @@ def uplink_sinr(scn, beta_up, p):
         jnp.arange(c_sorted.shape[0])[:, None], scn.up_order
     ].set(intra_sorted).T                          # back to (U, M)
 
-    # inter-cell: total received at AP n from users of other cells
-    # T[n, m] = Σ_u β·p·h_up[u, n, m]  minus own-cell contributions
-    t_all = jnp.einsum("um,unm->nm", beta_up * p[:, None], scn.h_up)
-    own_cell = jax.ops.segment_sum(contrib, scn.assoc,
-                                   num_segments=cfg.n_aps)   # (N, M)
-    # clamp: t_all - own_cell cancels catastrophically when one cell holds
-    # every user on a channel; f32 residue (~1e-13 W) can exceed the noise
-    # floor and flip the SINR sign
-    t_other = jnp.maximum(t_all - own_cell, 0.0)
-    inter = t_other[scn.assoc]                     # (U, M)
+    # inter-cell: received at AP n from users of OTHER cells, summed
+    # cancellation-free over a (U, N) other-cell mask — never as
+    # t_all - own_cell, whose f32 residue (~1e-13 W) can exceed the noise
+    # floor when one cell holds every user on a channel, and whose ±ulp
+    # sign noise makes the zero-interference relu tie nondeterministic
+    # (the fused step kernel, kernels/era_step, replicates this exact-tie
+    # behaviour; keep the two formulations in sync)
+    other = 1.0 - jax.nn.one_hot(scn.assoc, cfg.n_aps,
+                                 dtype=contrib.dtype)         # (U, N)
+    t_other = jnp.einsum("um,unm,un->nm", beta_up * p[:, None], scn.h_up,
+                         other)
+    inter = jnp.maximum(t_other, 0.0)[scn.assoc]   # (U, M)
 
     sig = p[:, None] * own
     return sig / (jnp.maximum(intra, 0.0) + inter + scn.env.noise_w)
@@ -87,12 +103,14 @@ def downlink_sinr(scn, beta_dn, p_ap):
     ].set(intra_sorted).T
     intra = intra_pwr * own
 
-    # inter-cell: other APs' total power through the cross gain h_dn[x, i, m]
+    # inter-cell: OTHER APs' total power through the cross gain
+    # h_dn[x, i, m], masked per user rather than cross_total - own_ap
+    # (see the uplink cancellation note)
     ap_power = jax.ops.segment_sum(comp, scn.assoc,
                                    num_segments=cfg.n_aps)   # (N, M)
-    cross = jnp.einsum("nm,num->um", ap_power, scn.h_dn)
-    own_ap = ap_power[scn.assoc] * own
-    inter = jnp.maximum(cross - own_ap, 0.0)       # see uplink clamp note
+    other = 1.0 - jax.nn.one_hot(scn.assoc, cfg.n_aps, dtype=comp.dtype)
+    cross = jnp.einsum("nm,num,un->um", ap_power, scn.h_dn, other)
+    inter = jnp.maximum(cross, 0.0)
 
     sig = p_ap[:, None] * own
     return sig / (jnp.maximum(intra, 0.0) + inter + scn.env.noise_w)

@@ -69,13 +69,16 @@ def pad_lanes(n_lanes: int, n_shards: int):
 _SWEEP_CACHE = {}
 
 
-def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, prof_batched,
-                      x_init_batched):
+def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, step_impl,
+                      prof_batched, x_init_batched):
     """Build (and cache) the jitted shard_map'd sweep for one static
     configuration.  The cache key is exactly the static argument set —
     the same split the unsharded ``_sweep_batch`` jits over, plus the
-    mesh (device set + axis name)."""
-    key = (mesh, max_steps, w, adaptive, gd_chunk, prof_batched,
+    mesh (device set + axis name).  ``step_impl='fused'`` keeps the body
+    collective-free: the fused step (kernels/era_step) is pure per-cell
+    jnp/Pallas with no cross-lane reductions, so it drops inside the
+    shard_map exactly like the autodiff body."""
+    key = (mesh, max_steps, w, adaptive, gd_chunk, step_impl, prof_batched,
            x_init_batched)
     fn = _SWEEP_CACHE.get(key)
     if fn is not None:
@@ -90,7 +93,7 @@ def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, prof_batched,
         # diverge from the single-device reference
         return ligd._vmapped_sweep(
             scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
-            adaptive=adaptive, gd_chunk=gd_chunk,
+            adaptive=adaptive, gd_chunk=gd_chunk, step_impl=step_impl,
             prof_batched=prof_batched, x_init_batched=x_init_batched)
 
     # check_rep=False: jax<=0.4 has no replication rule for `while`; every
@@ -106,8 +109,8 @@ def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, prof_batched,
 
 
 def sharded_sweep(mesh, scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w,
-                  prof, *, adaptive=False, gd_chunk=0, prof_batched=False,
-                  x_init_batched=False):
+                  prof, *, adaptive=False, gd_chunk=0, step_impl="xla",
+                  prof_batched=False, x_init_batched=False):
     """Drop-in replacement for ``ligd._sweep_batch`` that runs the vmapped
     sweep under ``shard_map`` over ``mesh``'s ``cells`` axis.  Pads the
     lane count to a multiple of the shard count (repeat-last, exact per
@@ -124,7 +127,7 @@ def sharded_sweep(mesh, scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w,
             prof = take(prof)
 
     fn = _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk,
-                           prof_batched, x_init_batched)
+                           step_impl, prof_batched, x_init_batched)
     swept = fn(scn_b, q_b, x_init, pred_b, jnp.float32(lr),
                jnp.float32(tol), prof)
     if idx is not None:

@@ -1,0 +1,96 @@
+"""Fused ERA GD step as a single Pallas TPU kernel launch.
+
+The innermost body of every Li-GD solve — NOMA SIC rates, QoE penalty, the
+scalar loss Γ and its gradient w.r.t. all five ``Allocation`` leaves —
+runs F+1 × ``max_steps`` × B times per admission round as ~30 separate XLA
+ops (plus their autodiff transposes).  This kernel evaluates the whole
+forward+backward in ONE launch: every operand is staged into VMEM once and
+the mask-matvec / log2 / sigmoid pipeline and its hand-derived transpose
+run back-to-back with zero intermediate HBM traffic — a custom-VJP-style
+fusion over the user axis.  SIC suffix interference is a masked matvec
+(``ref._sic_mask``, the same cancellation-free formulation noma_rate and
+core.noma use), so the kernel's hot ops are MXU dots over in-register 0/1
+masks; the backward is the transposed mask einsum (scatter- and
+gather-free, see ref.py).
+
+The kernel body calls ``ref.fused_step_math`` on its loaded blocks — the
+oracle and the kernel share one definition of the arithmetic, so the
+kernel sweep (tests/test_era_step.py) validates Pallas plumbing and Mosaic
+lowering, while ref-vs-autodiff validates the math itself.
+
+Sizing: one grid step holds the full problem in VMEM.  At test scale
+(U≤64, M≤16, N≤4) that is a few hundred KiB; at paper scale (U=1250,
+M=250, N=5) the (N, M, U) cross-gain tensors dominate at ~6 MiB each in
+f32 — inside the ~16 MiB VMEM budget but with little headroom, so a
+channel-tiled grid (bm blocks of the M axis, like noma_rate) with a final
+cross-block reduction is the documented follow-up for paper scale.  The
+transient (M, U, U) SIC masks are never operands — they expand in VMEM
+from two (M, U) rows per link direction, one channel block at a time once
+the grid is tiled.
+
+Operands and gradients are all f32 with no data-dependent indexing at all,
+precisely so this lowers to Mosaic as dots + elementwise ops — the one
+Pallas-hostile primitive family (dynamic lane gathers) was designed out at
+the ref.py level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.era_step.ref import fused_step_math
+
+# operand count of fused_step_math (kernel refs appear in the same order)
+N_OPERANDS = 20
+
+
+def _kernel(*refs, w):
+    ins = refs[:N_OPERANDS]
+    gamma_ref, dbu_ref, dbd_ref, dp_ref, dpap_ref, dr_ref = refs[N_OPERANDS:]
+    gamma, (d_bu, d_bd, d_p, d_pap, d_r) = fused_step_math(
+        *(r[...] for r in ins), w=w)
+    gamma_ref[0, 0] = gamma
+    dbu_ref[...] = d_bu
+    dbd_ref[...] = d_bd
+    dp_ref[...] = d_p
+    dpap_ref[...] = d_pap
+    dr_ref[...] = d_r
+
+
+@functools.partial(jax.jit, static_argnames=("w", "interpret"))
+def era_step_fused(*operands, w, interpret=False):
+    """One fused forward+backward launch.  ``operands``: the 20 assembled
+    tensors of ``ref.fused_step_math`` (``ops._operands`` builds them).
+    Returns ``(gamma (1,1), d_beta_up_t, d_beta_dn_t, d_p, d_pap, d_r)``."""
+    if len(operands) != N_OPERANDS:
+        raise ValueError(f"expected {N_OPERANDS} operands, "
+                         f"got {len(operands)}")
+    m, u = operands[0].shape
+
+    def spec(x):
+        zeros = (0,) * x.ndim
+        return pl.BlockSpec(x.shape, lambda *_, _z=zeros: _z)
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),       # gamma
+        jax.ShapeDtypeStruct((m, u), jnp.float32),       # d beta_up_t
+        jax.ShapeDtypeStruct((m, u), jnp.float32),       # d beta_dn_t
+        jax.ShapeDtypeStruct((1, u), jnp.float32),       # d p
+        jax.ShapeDtypeStruct((1, u), jnp.float32),       # d p_ap
+        jax.ShapeDtypeStruct((1, u), jnp.float32),       # d r
+    ]
+    return pl.pallas_call(
+        functools.partial(_kernel, w=w),
+        grid=(1,),
+        in_specs=[spec(x) for x in operands],
+        out_specs=[spec(jax.ShapeDtypeStruct(s.shape, s.dtype))
+                   for s in out_shapes],
+        out_shape=out_shapes,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*operands)

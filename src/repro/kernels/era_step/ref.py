@@ -1,0 +1,213 @@
+"""Oracle for the fused ERA GD-step kernel — analytic forward + backward.
+
+One call evaluates the whole per-step body of ``ligd._gd_core``: NOMA
+uplink/downlink SIC rates (eqs. 5–11), delay/energy terms (eqs. 12, 22),
+the QoE penalty (eqs. 13–17), the scalar loss Γ (eq. 24) AND its gradient
+w.r.t. every ``Allocation`` leaf — i.e. exactly what
+``jax.value_and_grad(utility(...).gamma)`` produces, but written as a
+single fused pipeline over pre-assembled channel-major operands so the
+Pallas kernel (kernel.py) can mirror it line for line in VMEM.
+
+Layout: channel-major ``(M, U)`` for β/gain/ordering tensors, ``(1, U)``
+rows for per-user scalars, ``(N, M, U)`` for the cross-cell gain tensors
+(N = number of APs, static), ``(1, 8)`` for the packed ``CellEnv`` scalars.
+``ops.build_aux``/``ops._operands`` assemble these from a ``Scenario``.
+
+SIC suffix interference as a masked matvec: user i's intra-cell
+interference is the sum over same-SIC-group users decoded after i —
+``mask[i, j] = [gid_i == gid_j] · [rank_j > rank_i]`` applied to the
+per-user contributions (one einsum per link direction).  The (U, U) mask
+is built in-registers from two (M, U) aux rows (decode rank + group id);
+its adjoint is the SAME mask einsum with the index order swapped, so the
+backward is transpose-free and gather-free by construction.  This
+deliberately avoids the sorted-cumsum-difference form noma.py uses:
+  * no in-loop ``take_along_axis`` — XLA:CPU's SPMD partitioner
+    miscompiles per-lane dynamic gathers inside a ``while_loop`` under
+    fully-partitioned ``shard_map`` (wrong/stale permutation on non-zero
+    shards, observed on jax 0.4.37; masks and matmuls are unaffected),
+    and the solver's sharded backend runs exactly that composition;
+  * no large-prefix cancellation — the mask sums only in-group terms,
+    where the global cumsum difference loses ~3 decimal digits in f32
+    across the path-loss dynamic range;
+  * an MXU/VPU-friendly inner product instead of a data-dependent
+    permutation network, which is what a TPU kernel wants anyway.
+
+Gradient-convention notes (must match JAX autodiff bit-for-semantics):
+  * ``jnp.maximum(x, y)`` propagates a 0.5 factor to each side at an exact
+    tie (``lax``'s balanced_eq rule) — the masked suffix sum is *exactly*
+    0.0 for the last-decoded user of every SIC group (empty mask row sums
+    no terms), so the relu on intra-cell interference hits that tie on
+    every call; ``_tie`` reproduces it.
+  * ``sigmoid'(x) = s(1-s)``, ``log2'(x) = 1/((1+x)·ln 2)``,
+    ``(r^a)' = a·r^(a-1)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LN2 = 0.6931471805599453
+
+
+def _tie(x):
+    """d/dx max(x, 0) with JAX's balanced tie rule (0.5 at x == 0)."""
+    return jnp.where(x > 0, 1.0, jnp.where(x < 0, 0.0, 0.5))
+
+
+def _sic_mask(rank, gid):
+    """(M, U, U) decode-order mask: ``mask[m, i, j] = 1`` iff users i and j
+    share channel m's SIC group and j is decoded after i (j's signal is
+    still un-cancelled interference at i's decode step)."""
+    same = gid[:, :, None] == gid[:, None, :]
+    later = rank[:, None, :] > rank[:, :, None]
+    return (same & later).astype(jnp.float32)
+
+
+def _suffix_apply(mask, x):
+    """``out[m, i] = Σ_j mask[m, i, j] · x[m, j]`` — the in-group
+    decoded-after suffix sum in user order."""
+    return jnp.einsum("mij,mj->mi", mask, x)
+
+
+def _suffix_transpose(mask, d):
+    """Adjoint of ``_suffix_apply`` w.r.t. ``x``: the same mask einsum
+    summed over the OTHER index — ``out[m, j] = Σ_i mask[m, i, j]·d[m, i]``
+    (each user j's contribution interferes with every same-group user
+    decoded before j)."""
+    return jnp.einsum("mij,mi->mj", mask, d)
+
+
+def fused_step_math(beta_up_t, beta_dn_t, p, p_ap, r, q,
+                    dev_fl, edge_fl, wup, wdn, envp,
+                    own_up_t, own_dn_t, h_up_r, h_dn_r, onehot,
+                    up_rank, up_gid, dn_rank, dn_gid, *, w):
+    """The fused forward+backward, shared verbatim by the oracle and the
+    Pallas kernel body (kernel.py loads its refs and calls this — one
+    source of truth for the math, so kernel-vs-ref can only diverge in
+    plumbing, never in arithmetic).
+
+    Returns ``(gamma, (d_beta_up_t, d_beta_dn_t, d_p, d_pap, d_r))`` with
+    gradients in the same layouts as their primal operands."""
+    noise = envp[0, 0]
+    bw = envp[0, 1]
+    c_dev = envp[0, 2]
+    c_min = envp[0, 3]
+    lam_exp = envp[0, 4]
+    xi_d = envp[0, 5]
+    xi_e = envp[0, 6]
+    n_aps = onehot.shape[0]
+    up_mask = _sic_mask(up_rank, up_gid)
+    dn_mask = _sic_mask(dn_rank, dn_gid)
+
+    # ---------------- forward: uplink SIC rates (noma.uplink_sinr) -------
+    bp_u = beta_up_t * p                          # (M, U) β·p
+    contrib_u = bp_u * own_up_t                   # β·p·|h|²
+    sig_u = p * own_up_t
+    intra_u = _suffix_apply(up_mask, contrib_u)
+    # inter-cell residual at AP n summed cancellation-free over OTHER-cell
+    # users (1 - onehot), not as t_all - own_cell: when no cross terms
+    # exist the sum is exactly 0.0, hitting the same relu tie the autodiff
+    # path's exact self-cancellation hits — a subtraction would land at
+    # ±ulp and flip ``_tie`` to 0/1 where autodiff propagates 0.5
+    raw_up = []
+    inter_u = jnp.zeros_like(bp_u)
+    for n in range(n_aps):
+        other = bp_u * h_up_r[n] * (1.0 - onehot[n][None, :])
+        raw = jnp.sum(other, axis=1, keepdims=True)             # (M, 1)
+        raw_up.append(raw)
+        inter_u = inter_u + jnp.maximum(raw, 0.0) * onehot[n][None, :]
+    d_up = jnp.maximum(intra_u, 0.0) + inter_u + noise
+    sinr_up = sig_u / d_up
+    rate_up = bw * jnp.log2(1.0 + sinr_up)
+    r_up = jnp.sum(beta_up_t * rate_up, axis=0, keepdims=True)      # (1,U)
+
+    # ---------------- forward: downlink SIC rates (noma.downlink_sinr) ---
+    comp_u = beta_dn_t * p_ap
+    sig_d = p_ap * own_dn_t
+    intra_pwr_u = _suffix_apply(dn_mask, comp_u)
+    intra_d = intra_pwr_u * own_dn_t
+    # same cancellation-free shape downlink: other-AP power only, never
+    # cross_total - own_ap (see the uplink note above)
+    ap_pow = []
+    raw_dn = jnp.zeros_like(comp_u)
+    for n in range(n_aps):
+        ap_n = jnp.sum(comp_u * onehot[n][None, :], axis=1,
+                       keepdims=True)             # (M, 1)
+        ap_pow.append(ap_n)
+        raw_dn = raw_dn + ap_n * h_dn_r[n] * (1.0 - onehot[n][None, :])
+    inter_d = jnp.maximum(raw_dn, 0.0)
+    d_dn = jnp.maximum(intra_d, 0.0) + inter_d + noise
+    sinr_dn = sig_d / d_dn
+    rate_dn = bw * jnp.log2(1.0 + sinr_dn)
+    r_dn = jnp.sum(beta_dn_t * rate_dn, axis=0, keepdims=True)
+
+    # ---------------- forward: delay / energy / QoE / Γ (era, qoe) -------
+    lam = r ** lam_exp
+    lam_p = lam_exp * r ** (lam_exp - 1.0)
+    edge_c = lam * c_min
+    t_dev = dev_fl / c_dev
+    t_srv = edge_fl / edge_c
+    mup = jnp.maximum(r_up, 1.0)
+    mdn = jnp.maximum(r_dn, 1.0)
+    t = t_dev + t_srv + wup / mup + wdn / mdn
+    e = (xi_d * c_dev ** 2 * dev_fl
+         + xi_e * edge_c ** 2 * edge_fl
+         + p * wup / mup + p_ap * wdn / mdn)
+    rq = jax.nn.sigmoid(w.qoe_a * (t / q - 1.0))
+    gamma = (w.w_t * jnp.sum(t) * w.t_scale
+             + w.w_q * (jnp.sum((t - q) * rq) * w.t_scale + jnp.sum(rq))
+             + w.w_r * (jnp.sum(e) * w.e_scale
+                        + jnp.sum(lam) * w.r_cost_scale))
+
+    # ---------------- backward: Γ -> per-user t/e/r cotangents -----------
+    rp = w.qoe_a * rq * (1.0 - rq) / q            # dR/dt
+    g_t = (w.w_t * w.t_scale
+           + w.w_q * (w.t_scale * (rq + (t - q) * rp) + rp))    # (1, U)
+    g_e = w.w_r * w.e_scale
+    d_r = (g_t * (-edge_fl * c_min * lam_p / (edge_c ** 2))
+           + g_e * (2.0 * xi_e * c_min ** 2 * lam * lam_p * edge_fl)
+           + w.w_r * w.r_cost_scale * lam_p)
+    g_rup = -_tie(r_up - 1.0) * (wup / mup ** 2) * (g_t + g_e * p)
+    g_rdn = -_tie(r_dn - 1.0) * (wdn / mdn ** 2) * (g_t + g_e * p_ap)
+    d_p = g_e * wup / mup                         # e_up = p·w/max(r,1)
+    d_pap = g_e * wdn / mdn
+
+    # ---------------- backward: uplink rate chain ------------------------
+    d_sinr = (g_rup * beta_up_t) * bw / ((1.0 + sinr_up) * _LN2)
+    d_bu = g_rup * rate_up                        # direct Σ_m β·rate term
+    psi = -d_sinr * sinr_up / d_up                # cotangent of D
+    d_contrib = _suffix_transpose(up_mask, psi * _tie(intra_u))
+    d_bp = jnp.zeros_like(bp_u)
+    for n in range(n_aps):
+        g_n = jnp.sum(psi * onehot[n][None, :], axis=1,
+                      keepdims=True) * _tie(raw_up[n])           # (M, 1)
+        d_bp = d_bp + g_n * h_up_r[n] * (1.0 - onehot[n][None, :])
+    d_bp = d_bp + d_contrib * own_up_t
+    d_bu = d_bu + d_bp * p
+    d_p = d_p + jnp.sum(d_bp * beta_up_t + (d_sinr / d_up) * own_up_t,
+                        axis=0, keepdims=True)
+
+    # ---------------- backward: downlink rate chain ----------------------
+    d_sinr_d = (g_rdn * beta_dn_t) * bw / ((1.0 + sinr_dn) * _LN2)
+    d_bd = g_rdn * rate_dn
+    psi_d = -d_sinr_d * sinr_dn / d_dn
+    d_inter = psi_d * _tie(raw_dn)
+    d_comp = _suffix_transpose(dn_mask, psi_d * _tie(intra_d) * own_dn_t)
+    for n in range(n_aps):
+        d_ap_n = jnp.sum(d_inter * h_dn_r[n]
+                         * (1.0 - onehot[n][None, :]),
+                         axis=1, keepdims=True)                  # (M, 1)
+        d_comp = d_comp + d_ap_n * onehot[n][None, :]
+    d_bd = d_bd + d_comp * p_ap
+    d_pap = d_pap + jnp.sum(d_comp * beta_dn_t + (d_sinr_d / d_dn)
+                            * own_dn_t, axis=0, keepdims=True)
+
+    return gamma, (d_bu, d_bd, d_p, d_pap, d_r)
+
+
+def era_step_ref(*operands, w):
+    """The pure-jnp oracle: ``fused_step_math`` on assembled operands.
+    Dispatched by ``ops.era_step_value_and_grad(impl='ref')`` — the fused
+    GD step on non-TPU backends, and the reference the Pallas kernel is
+    regression-tested against."""
+    return fused_step_math(*operands, w=w)

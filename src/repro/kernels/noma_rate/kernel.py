@@ -1,16 +1,16 @@
 """NOMA SIC rate evaluation as a Pallas TPU kernel — the inner loop of the
 ERA scheduler (one evaluation per candidate allocation per admission round).
 
-Grid tiles the subchannel axis; each instance holds a (bm, U) tile in VMEM
-(U ≤ 2048 users · 4 B · bm=8 rows ≈ 64 KiB) and runs the cumulative-sum /
-suffix-interference / log2 pipeline on the VPU.  This is a bandwidth-bound
-elementwise kernel — the win on TPU is fusing the whole SIC pipeline into
-one VMEM pass instead of five HBM round-trips (cumsum, gather, sub, div,
-log) for paper-scale (M=250, U=1250) scenarios.
-
-NOTE the in-kernel gather (take_along_axis on the lane axis) is exercised in
-interpret mode here; on real TPUs it lowers to dynamic-slice-in-lane which
-Mosaic supports for rank-2 refs.
+Grid tiles the subchannel axis; each instance holds (bm, U) operand tiles
+in VMEM and evaluates the suffix interference as a same-group/decoded-later
+mask matvec (an MXU batched dot; see ref.py for why cumsum differences are
+numerically unacceptable here), then the SINR/log2 tail on the VPU — one
+VMEM pass instead of five HBM round-trips (mask, dot, add, div, log).
+The (bm, U, U) mask is built in-registers from the (bm, U) group-key tile
+and never touches HBM; it bounds the tile ladder at U ≈ 512 for bm=8
+(8 MiB VMEM) — the paper-scale U=1250 grid needs the channel-tiled
+cross-block reduction tracked in ROADMAP (same follow-up as
+kernels/era_step).  No data-dependent indexing anywhere in the kernel.
 
 The GD path keeps the pure-jnp implementation (autodiff); this kernel serves
 the no-gradient evaluation path (scheduler scoring, benchmarks).
@@ -31,9 +31,13 @@ def _kernel(contrib_ref, sig_ref, gend_ref, inter_ref, rate_ref, *, bw):
     gend = gend_ref[...]
     inter = inter_ref[...].astype(jnp.float32)
 
-    cs = jnp.cumsum(contrib, axis=1)
-    end_cs = jnp.take_along_axis(cs, gend, axis=1)
-    intra = end_cs - cs
+    u = contrib.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (u, u), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (u, u), 1)
+    same = gend[:, :, None] == gend[:, None, :]            # (bm, U, U)
+    mask = jnp.where(same & (jdx > idx)[None], 1.0, 0.0).astype(jnp.float32)
+    intra = jnp.einsum("bij,bj->bi", mask, contrib,
+                       preferred_element_type=jnp.float32)
     sinr = sig / (intra + inter)
     rate_ref[...] = (bw * jnp.log2(1.0 + sinr)).astype(rate_ref.dtype)
 

@@ -17,11 +17,15 @@ def uplink_rates_kernel(scn, beta_up, p, *, interpret=None):
     contrib = (beta_up * p[:, None] * own).T       # (M, U)
     sig = (p[:, None] * own).T
 
-    # inter-cell + noise, in user order then sorted
-    t_all = jnp.einsum("um,unm->nm", beta_up * p[:, None], scn.h_up)
-    own_cell = jax.ops.segment_sum(beta_up * p[:, None] * own, scn.assoc,
-                                   num_segments=cfg.n_aps)
-    inter = (t_all - own_cell)[scn.assoc].T + cfg.noise_w  # (M, U)
+    # inter-cell + noise, in user order then sorted.  Masked other-cell sum,
+    # NOT t_all - own_cell: the subtraction cancels catastrophically against
+    # the own-cell magnitude and can zero genuine cross-cell terms that sit
+    # well above the noise floor (same formulation as core.noma.uplink_sinr —
+    # keep the two in sync).
+    other = 1.0 - jax.nn.one_hot(scn.assoc, cfg.n_aps, dtype=beta_up.dtype)
+    t_other = jnp.einsum("um,unm,un->nm", beta_up * p[:, None], scn.h_up,
+                         other)
+    inter = jnp.maximum(t_other, 0.0)[scn.assoc].T + cfg.noise_w  # (M, U)
 
     mi = jnp.arange(contrib.shape[0])[:, None]
     c_sorted = contrib[mi, scn.up_order]

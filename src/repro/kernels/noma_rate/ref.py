@@ -4,21 +4,42 @@ Works on pre-sorted per-subchannel tensors (the static SIC ordering of
 core.network.Scenario):
   contrib (M, U)     β·p·|h|² sorted in SIC decode order, grouped by AP
   sig     (M, U)     p·|h|² (signal power) in the same order
-  group_end (M, U)   index of the last same-AP entry for each position
+  group_end (M, U)   group key per position — in scenario tensors this is
+                     the index of the last same-AP entry, constant within a
+                     group (core.network precomputes it that way)
   inter   (M, U)     inter-cell interference + noise (already summed)
 
 Returns per-(channel, sorted-user) rate contribution:
   rate = bw · log2(1 + sig / (suffix_intra + inter))
-with suffix_intra[i] = Σ contrib(i..group_end[i]] (users decoded later).
+with suffix_intra[i] = Σ_j contrib[j] over same-group positions j > i
+(users decoded later).
+
+The suffix is a masked matvec — mask[i,j] = [key_i == key_j]·[j > i] —
+NOT the seed's cumsum difference ``cs[group_end] - cs``: the global cumsum
+grows across groups, so a small in-group suffix is recovered as the
+difference of two large prefixes and f32 cancellation noise (~eps·cs) can
+exceed the suffix itself — and the noise floor — by orders of magnitude.
+The mask sums only the in-group terms, so the error stays at group scale
+and an empty suffix is EXACTLY 0.0.  Same formulation as
+core.noma._suffix_interference and kernels/era_step — keep all three in
+sync (the fused-step solver regressions pin rtol=1e-5 against core on the
+strength of that consistency).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
+def suffix_mask(group_end):
+    """(…, U) group keys → (…, U, U) f32 mask of same-group later positions."""
+    u = group_end.shape[-1]
+    idx = jnp.arange(u)
+    same = group_end[..., :, None] == group_end[..., None, :]
+    later = idx[None, :] > idx[:, None]
+    return (same & later).astype(jnp.float32)
+
+
 def noma_rate_ref(contrib, sig, group_end, inter, bw):
-    cs = jnp.cumsum(contrib, axis=1)
-    end_cs = jnp.take_along_axis(cs, group_end, axis=1)
-    intra = end_cs - cs
+    intra = jnp.einsum("...ij,...j->...i", suffix_mask(group_end), contrib)
     sinr = sig / (intra + inter)
     return bw * jnp.log2(1.0 + sinr)

@@ -290,3 +290,13 @@ def analyze(hlo: str) -> Cost:
     else:  # fall back: last computation
         entry = list(comps)[-1]
     return comp_cost(entry)
+
+
+def cost_of_callable(fn, *args, **kwargs) -> Cost:
+    """Compile ``fn(*args, **kwargs)`` with jit and analyze the optimized
+    (post-fusion) HLO.  The backend's fusion decisions are what determine
+    the write_bytes proxy, so benchmarks must cost the HLO the platform
+    actually runs — not the stableHLO jaxpr lowering."""
+    import jax
+    compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+    return analyze(compiled.as_text())

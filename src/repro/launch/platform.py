@@ -1,0 +1,153 @@
+"""Platform presets: one place that pins the execution environment a
+benchmark ran under, so two BENCH_*.json files are comparable or visibly
+not.
+
+The problem this solves: XLA flags and host-device-count env vars silently
+change benchmark numbers (latency-hiding scheduler, forced CPU device
+count, allocator), but they live in whoever's shell launched the process —
+a Makefile target, a CI runner, a developer tmux.  Two runs of the same
+benchmark with different ambient env produce different numbers that look
+like regressions.  A preset names the intended environment, ``apply()``
+pins it (env vars must be set before jax initialises), and ``describe()``
+reports what was EFFECTIVE at run time — benchmarks/run.py embeds that
+into every BENCH_*.json config block.
+
+Presets (names are the contract; the flag sets are the current best
+known-good for this repo's workloads):
+
+  cpu        single-process CPU, no forced device count — the tier-1 test
+             environment.
+  cpu-mesh   CPU with ``--xla_force_host_platform_device_count=4`` — what
+             `make test-solver` uses to exercise shard_map paths; REQUIRED
+             for the sharded-backend benchmarks to mean anything on a
+             one-socket machine.
+  gpu        the standard latency-hiding flag set (triton softmax fusion,
+             async collectives, latency-hiding scheduler).
+  tpu        no XLA flag overrides — Mosaic/XLA:TPU defaults; kernels in
+             kernels/ take over the hot loops.
+
+Allocator note (run.sh-style, can't be set from inside the process):
+benchmarks on glibc malloc see up to ~10% jitter from arena contention on
+many-core hosts; preload tcmalloc when available:
+  LD_PRELOAD=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+``describe()`` records whether a preload was active so runs are comparable.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_FORCE_DEVICES = "--xla_force_host_platform_device_count"
+
+_GPU_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true "
+    "--xla_gpu_triton_gemm_any=True "
+    "--xla_gpu_enable_async_collectives=true "
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+    "--xla_gpu_enable_highest_priority_async_stream=true"
+)
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    platform: Optional[str] = None      # jax_platform_name, None = leave
+    xla_flags: str = ""                 # appended to ambient XLA_FLAGS
+    host_devices: Optional[int] = None  # forced CPU device count
+    env: Dict[str, str] = field(default_factory=dict)
+
+
+PRESETS = {
+    "cpu": Preset("cpu", platform="cpu"),
+    "cpu-mesh": Preset("cpu-mesh", platform="cpu", host_devices=4),
+    "gpu": Preset("gpu", platform="gpu", xla_flags=_GPU_FLAGS),
+    "tpu": Preset("tpu", platform="tpu"),
+}
+
+# the preset apply() pinned this process to (None = never applied: the
+# ambient environment is whatever the launcher exported)
+_ACTIVE: Optional[str] = None
+
+
+def set_platform(platform: str) -> None:
+    """Pin the jax platform ('cpu'|'gpu'|'tpu').  Only effective before
+    jax initialises its backends — call at process start."""
+    import jax
+    jax.config.update("jax_platform_name", platform)
+
+
+def set_host_device_count(n: int) -> None:
+    """Force the CPU backend to expose ``n`` devices (shard_map testing on
+    one-socket machines).  Appends to XLA_FLAGS, replacing any previous
+    forced count; must run before jax initialises."""
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith(_FORCE_DEVICES)]
+    flags.append(f"{_FORCE_DEVICES}={int(n)}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+
+
+def apply(name: str) -> Preset:
+    """Apply a named preset to this process.  Idempotent; raises on an
+    unknown name.  Returns the preset for logging."""
+    global _ACTIVE
+    preset = PRESETS.get(name)
+    if preset is None:
+        raise ValueError(
+            f"unknown platform preset {name!r}; have {sorted(PRESETS)}")
+    if preset.xla_flags:
+        ambient = os.environ.get("XLA_FLAGS", "")
+        if preset.xla_flags not in ambient:
+            os.environ["XLA_FLAGS"] = (ambient + " " + preset.xla_flags).strip()
+    if preset.host_devices is not None:
+        set_host_device_count(preset.host_devices)
+    for k, v in preset.env.items():
+        os.environ.setdefault(k, v)
+    if preset.platform is not None:
+        set_platform(preset.platform)
+    _ACTIVE = name
+    return preset
+
+
+def active_preset() -> Optional[str]:
+    return _ACTIVE
+
+
+def describe() -> Dict:
+    """The EFFECTIVE environment of this process, for benchmark config
+    blocks: what jax actually sees, not what a preset intended.  Safe to
+    call whether or not ``apply()`` ever ran."""
+    import jax
+    devices = jax.devices()
+    forced = None
+    for f in os.environ.get("XLA_FLAGS", "").split():
+        if f.startswith(_FORCE_DEVICES + "="):
+            try:
+                forced = int(f.split("=", 1)[1])
+            except ValueError:
+                forced = None
+    return {
+        "preset": _ACTIVE or "ambient",
+        "platform": devices[0].platform,
+        "n_devices": len(devices),
+        "forced_host_devices": forced,
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "ld_preload": os.environ.get("LD_PRELOAD", ""),
+        "jax_enable_x64": bool(jax.config.read("jax_enable_x64")),
+    }
+
+
+def roofline_peaks() -> Dict[str, float]:
+    """Per-platform peak FLOP/s and memory bandwidth for roofline ratios.
+    TPU numbers are the v5e constants launch/mesh.py pins; CPU/GPU numbers
+    are order-of-magnitude class figures — good enough to CLASSIFY a
+    kernel as compute- vs memory-bound, not to predict its runtime."""
+    import jax
+    platform = jax.devices()[0].platform
+    if platform == "tpu":
+        from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+        return {"peak_flops": PEAK_FLOPS_BF16, "mem_bw": HBM_BW,
+                "basis": "tpu-v5e"}
+    if platform == "gpu":
+        return {"peak_flops": 60e12, "mem_bw": 1.5e12, "basis": "gpu-class"}
+    return {"peak_flops": 5e11, "mem_bw": 5e10, "basis": "cpu-class"}

@@ -106,6 +106,38 @@ def roofline_row(rec) -> dict:
     }
 
 
+def step_roofline(cost, peaks=None) -> dict:
+    """Roofline position of ONE solver/kernel step from a hlo_cost.Cost.
+
+    Unlike ``roofline_row`` (which reads dry-run artifacts for the big
+    training/serving graphs), this takes a cost measured in-process —
+    ``hlo_cost.cost_of_callable`` over e.g. one Li-GD step — and places it
+    against the current platform's peaks (launch/platform.roofline_peaks
+    by default).  ``intensity`` is FLOPs per HBM byte written; the machine
+    balance point is peak_flops / mem_bw — below it the step is
+    memory-bound and fusion (fewer materialised intermediates) is the
+    lever, which is exactly the claim BENCH_era_step.json quantifies."""
+    if peaks is None:
+        from repro.launch.platform import roofline_peaks
+        peaks = roofline_peaks()
+    flops = float(cost.flops)
+    bytes_ = float(cost.write_bytes)
+    t_comp = flops / peaks["peak_flops"]
+    t_mem = bytes_ / peaks["mem_bw"]
+    balance = peaks["peak_flops"] / peaks["mem_bw"]
+    return {
+        "flops": flops,
+        "write_bytes": bytes_,
+        "write_bytes_raw": float(cost.write_bytes_raw),
+        "intensity": flops / bytes_ if bytes_ else float("inf"),
+        "machine_balance": balance,
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "bound": "compute" if t_comp >= t_mem else "memory",
+        "peaks_basis": peaks.get("basis", "unknown"),
+    }
+
+
 LEVERS = {
     ("compute", True): "useful ratio < 0.5: cut masked-attention waste "
                        "(flash kernel) / remat recompute",

@@ -10,6 +10,17 @@ from repro.kernels.noma_rate import ref as nr_ref
 from repro.kernels.noma_rate.kernel import noma_rate
 from repro.kernels.ssd import ops as ssd_ops, ref as ssd_ref
 
+pytestmark = pytest.mark.kernels
+
+# interpret=True emulates the kernel on CPU (what `make test-kernels`
+# runs on CPU-only CI); interpret=False is the compiled TPU lane
+INTERPRET_MODES = [
+    True,
+    pytest.param(False, marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="compiled Pallas kernel needs a TPU")),
+]
+
 
 FLASH_CASES = [
     # b, s, h, kh, d, window, dtype
@@ -89,9 +100,10 @@ def test_ssd_decode_consistency():
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
 @pytest.mark.parametrize("m,u,bm", [(8, 32, 4), (16, 64, 8), (12, 48, 8)])
 @pytest.mark.slow
-def test_noma_rate_kernel_sweep(m, u, bm):
+def test_noma_rate_kernel_sweep(m, u, bm, interpret):
     ks = jax.random.split(jax.random.PRNGKey(3), 4)
     contrib = jax.random.uniform(ks[0], (m, u))
     sig = jax.random.uniform(ks[1], (m, u))
@@ -99,7 +111,8 @@ def test_noma_rate_kernel_sweep(m, u, bm):
     gend = jnp.maximum(jnp.sort(jax.random.randint(ks[3], (m, u), 0, u), 1),
                        jnp.arange(u)[None, :])
     want = nr_ref.noma_rate_ref(contrib, sig, gend, inter, 2e6)
-    got = noma_rate(contrib, sig, gend, inter, bw=2e6, bm=bm, interpret=True)
+    got = noma_rate(contrib, sig, gend, inter, bw=2e6, bm=bm,
+                    interpret=interpret)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-3)
 

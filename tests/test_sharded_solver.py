@@ -192,6 +192,43 @@ def test_subset_solve_validates_cells():
     assert ms.schedule(np.asarray(qs), cells=[]) == []
 
 
+# ------------------------------------------------------- lane placement
+def test_sorted_lane_placement_preserves_outputs_under_skew():
+    """Satellite acceptance: ``lane_placement='sorted'`` reorders lanes by
+    previous-round iteration counts before shard_map and inverts the
+    permutation on output — per-lane results must equal the 'none'
+    placement EXACTLY (the vmapped while_loop freezes converged lanes, so
+    a lane's iterates never depend on which shard group it rides in).
+    Skewed convergence makes the sort non-trivial: one deliberately stiff
+    cell converges far slower than the rest."""
+    cfg, scns, prof, qs = _setup(n_cells=4)
+    hard = network.small_config(
+        n_users=cfg.n_users, n_subchannels=cfg.n_subchannels,
+        p_max_w=0.02, r_max=8.0)
+    scns[0] = network.make_scenario(jax.random.PRNGKey(100), hard)
+    base = ligd.SolverSpec(backend="sharded", gd_chunk=4, max_steps=60)
+    srt = base.replace(lane_placement="sorted")
+    ligd.reset_lane_history()
+    ref = ligd.solve_batch(scns, prof, qs, spec=base)
+    # round 1 seeds the iteration history; round 2 actually permutes
+    ligd.solve_batch(scns, prof, qs, spec=srt)
+    assert ligd._lane_permutation(4, len(jax.devices())) is not None \
+        or len(jax.devices()) == 1
+    out = ligd.solve_batch(scns, prof, qs, spec=srt)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(b.gamma_by_layer),
+                                      np.asarray(a.gamma_by_layer))
+        np.testing.assert_array_equal(np.asarray(b.s), np.asarray(a.s))
+        np.testing.assert_array_equal(np.asarray(b.iters_by_layer),
+                                      np.asarray(a.iters_by_layer))
+        for ax, bx in zip(jax.tree.leaves(a.alloc), jax.tree.leaves(b.alloc)):
+            np.testing.assert_array_equal(np.asarray(bx), np.asarray(ax))
+    # skew shows up in the recorded history: the stiff cell tops the sort
+    hist = ligd._LANE_ITERS[4]
+    assert int(np.argmax(hist)) == 0
+    ligd.reset_lane_history()
+
+
 # ------------------------------------------------------------ chunked GD
 def test_chunked_gd_matches_while_loop_reference():
     """Satellite acceptance: the chunked path's iterates, iteration counts
