@@ -1,24 +1,32 @@
-# Tier-1 verification targets.  `make test-fast` skips the interpret-mode
-# Pallas kernel sweeps (marked slow) — the bulk of the suite's wall clock.
-# `make test-serving` runs the serving-path regression suite (split
-# execution + async admission loop).  `make test-solver` groups the solver
-# suites (ligd core / batched sweep / sharded SPMD) and forces 4 host
-# devices so the shard_map multi-device paths are exercised on CPU-only CI.
-# `make test-cluster` runs the unified cluster API suite (SolverSpec +
-# SplitInferenceCluster churn lifecycle).  `make test-kernels` runs every
-# Pallas kernel suite (kernels marker) in interpret mode, under 4 forced
-# host devices so the fused-step sharded regressions see a real SPMD split.
+# Tier-1 verification targets.  `make test` is the bounded CI default: it
+# skips the `distributed` marker (subprocess-per-case suites that compile
+# full train steps on forced host devices — minutes each), which
+# `make test-distributed` runs on its own; plain `pytest -q` remains the
+# full tier-1 sweep.  `make test-fast` additionally skips the
+# interpret-mode Pallas kernel sweeps (marked slow) — the bulk of the
+# suite's wall clock.  `make test-serving` runs the serving-path
+# regression suite (split execution + async admission loop).
+# `make test-solver` groups the solver suites (ligd core / batched sweep /
+# sharded SPMD) and forces 4 host devices so the shard_map multi-device
+# paths are exercised on CPU-only CI.  `make test-cluster` runs the
+# unified cluster API suite (SolverSpec + SplitInferenceCluster churn
+# lifecycle).  `make test-kernels` runs every Pallas kernel suite (kernels
+# marker) in interpret mode, under 4 forced host devices so the fused-step
+# sharded regressions see a real SPMD split.
 PY := PYTHONPATH=src python
 SOLVER_DEVICES := XLA_FLAGS="--xla_force_host_platform_device_count=4"
 
 .PHONY: test test-fast test-serving test-solver test-cluster test-kernels \
-	bench bench-quick
+	test-distributed bench bench-quick
 
 test:
-	$(PY) -m pytest -q
+	$(PY) -m pytest -q -m "not distributed"
 
 test-fast:
-	$(PY) -m pytest -q -m "not slow"
+	$(PY) -m pytest -q -m "not slow and not distributed"
+
+test-distributed:
+	$(PY) -m pytest -q -m distributed
 
 test-serving:
 	$(PY) -m pytest -q tests/test_serving.py tests/test_admission.py

@@ -13,7 +13,14 @@ Three claim families, landing in BENCH_era_step.json:
   3. full-solve latency across the 1/2/4/8 cell bucket ladder under the
      sharded backend, ``step_impl='xla'`` vs ``'fused'``, plus the final-Γ
      relative agreement between the two paths (the regression bound
-     tests/test_era_step.py pins at rtol=1e-5).
+     tests/test_era_step.py pins at rtol=1e-5);
+  4. the paper-scale record (U=1250, M=250, N=5): the channel-tiled fused
+     step's latency and roofline position vs the XLA autodiff step's
+     write-bytes proxy.  The XLA step is costed (compile + HLO analysis)
+     but NOT executed — its O(M·U²) SIC masks alone are ~1.5 TB, which is
+     exactly the latent OOM the tiled grid removes.  The tile columns
+     (``roofline.tiled_step_roofline``) land the chosen TPU block size and
+     its per-block VMEM footprint against the budget.
 
 Platform comparability: benchmarks/run.py embeds
 ``launch.platform.describe()`` (effective XLA_FLAGS, preset, device count)
@@ -32,12 +39,20 @@ from benchmarks.common import emit
 from repro.core import era, ligd, network, profiles
 from repro.core.era import Weights
 from repro.kernels.era_step import ops as eops
+from repro.kernels.era_step.kernel import (DEFAULT_VMEM_BUDGET,
+                                           block_vmem_bytes, choose_block_m)
 from repro.launch.hlo_cost import cost_of_callable
-from repro.launch.roofline import step_roofline
+from repro.launch.roofline import step_roofline, tiled_step_roofline
 
-PER_STEP_SIZES = [(8, 4), (16, 8), (32, 8)]    # (n_users, n_subchannels)
+PER_STEP_SIZES = [(8, 4), (16, 8), (32, 8), (64, 16)]  # (users, subchannels)
 BUCKETS = (1, 2, 4, 8)
 GD_CHUNK = 8
+PAPER_U, PAPER_M = 1250, 250
+# CPU lane of the paper-scale record: the auto-chosen TPU block (bm=1,
+# 250 grid steps) would unroll into a 250-block XLA loop here — use a
+# divisor that keeps per-block host buffers small (~bm·U²·4 B ≈ 312 MB
+# of masks) without exploding compile time
+PAPER_BLOCK_M_CPU = 50
 
 
 def _median_time(fn, n=5):
@@ -136,12 +151,65 @@ def _full_solve(buckets, reps, quick):
         emit(f"era_step.solve_gamma_rel.b{b}", 0.0, f"{g_rel:.3e}")
 
 
+def _paper_scale(reps):
+    u, m = PAPER_U, PAPER_M
+    scn, prof, q, w, s_vec, alloc = _step_setup(u, m)
+    aux = eops.build_aux(scn)
+    n_aps = scn.h_up.shape[1]
+    tag = f"u{u}m{m}"
+
+    # what a TPU launch would pick, and what it costs per block
+    bm = choose_block_m(m, u, n_aps)
+    vmem = block_vmem_bytes(bm, u, n_aps)
+    vmem_untiled = block_vmem_bytes(m, u, n_aps)
+    emit(f"era_step.paper.block_m.{tag}", 0.0,
+         f"bm={bm} nb={-(-m // bm)} block_vmem={vmem / 2**20:.2f}MiB "
+         f"budget={DEFAULT_VMEM_BUDGET / 2**20:.0f}MiB "
+         f"untiled={vmem_untiled / 2**20:.0f}MiB")
+
+    # tiled fused step: the only paper-scale lane that can EXECUTE here
+    bm_cpu = PAPER_BLOCK_M_CPU
+    fused_fn = jax.jit(lambda a: eops.era_step_value_and_grad(
+        scn, prof, s_vec, q, a, w, aux=aux, block_m=bm_cpu))
+    _block(fused_fn(alloc))                                       # warm
+    us_f = _median_time(lambda: _block(fused_fn(alloc)), reps)
+    emit(f"era_step.paper.step_fused_us.{tag}", us_f, f"bm={bm_cpu}")
+
+    rf = tiled_step_roofline(
+        cost_of_callable(lambda a: eops.era_step_value_and_grad(
+            scn, prof, s_vec, q, a, w, aux=aux, block_m=bm_cpu), alloc),
+        n_blocks=-(-m // bm), block_vmem_bytes=vmem,
+        vmem_budget=DEFAULT_VMEM_BUDGET)
+    emit(f"era_step.paper.roofline_fused.{tag}", 0.0,
+         f"flops={rf['flops']:.3e} write_bytes={rf['write_bytes']:.3e} "
+         f"intensity={rf['intensity']:.2f} bound={rf['bound']} "
+         f"n_blocks={rf['n_blocks']} vmem_fits={rf['block_vmem_fits']}")
+
+    # XLA autodiff step: compile + HLO cost only — running it would
+    # materialise the (M, U, U) SIC masks (~1.5 TB f32), the latent OOM
+    # the tiled grid exists to remove.  memory_s is the roofline-model
+    # lower bound on its step time at this platform's bandwidth.
+    def loss(a):
+        return era.utility(scn, prof, s_vec, a, q, w).gamma
+
+    rx = step_roofline(cost_of_callable(jax.value_and_grad(loss), alloc))
+    emit(f"era_step.paper.roofline_xla.{tag}", 0.0,
+         f"flops={rx['flops']:.3e} write_bytes={rx['write_bytes']:.3e} "
+         f"intensity={rx['intensity']:.2f} bound={rx['bound']} "
+         f"NOT-RUN mem_lower_bound_us={rx['memory_s'] * 1e6:.0f}")
+    if rf["write_bytes"]:
+        emit(f"era_step.paper.roofline_bytes_reduction.{tag}", 0.0,
+             f"{rx['write_bytes'] / rf['write_bytes']:.2f}x")
+
+
 def run(quick=False):
     reps = 3 if quick else 5
     sizes = PER_STEP_SIZES[:2] if quick else PER_STEP_SIZES
     buckets = (1, 4) if quick else BUCKETS
     _per_step(sizes, reps)
     _full_solve(buckets, reps, quick)
+    if not quick:
+        _paper_scale(reps)
 
 
 if __name__ == "__main__":

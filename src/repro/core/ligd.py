@@ -163,6 +163,14 @@ class SolverSpec:
                       dealt round-robin across shards) and inverts the
                       permutation on output; outcomes are exactly the
                       'none' ordering's.  'sharded' backend only.
+      step_block_m    channel-tile size of the fused step's Pallas grid
+                      (``kernels/era_step``): 0 (default) auto-sizes from
+                      the kernel's VMEM budget — untiled whenever the
+                      whole problem fits, bm=1 at paper scale; > 0 forces
+                      that block on both the kernel and the jnp oracle
+                      (the oracle runs its tiled mirror, reproducing the
+                      kernel's accumulation order).  'fused' step_impl
+                      only; jit-static of the sweep.
     """
     backend: str = "reference"
     gd_chunk: int = 0
@@ -178,6 +186,7 @@ class SolverSpec:
     mesh: Optional[object] = None          # jax.sharding.Mesh (hashable)
     step_impl: str = "xla"
     lane_placement: str = "none"
+    step_block_m: int = 0
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
@@ -208,6 +217,12 @@ class SolverSpec:
             raise ValueError("lane_placement='sorted' permutes lanes "
                              "across mesh shards — it only applies to "
                              "backend='sharded'")
+        if self.step_block_m < 0:
+            raise ValueError(f"step_block_m must be >= 0, "
+                             f"got {self.step_block_m}")
+        if self.step_block_m and self.step_impl != "fused":
+            raise ValueError("step_block_m tiles the fused step's kernel "
+                             "grid — it only applies to step_impl='fused'")
         if not self.lr > 0:
             raise ValueError(f"lr must be > 0, got {self.lr}")
         if self.tol < 0:
@@ -312,7 +327,8 @@ def _scales(env):
 
 
 def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-             adaptive=False, gd_chunk=0, step_impl="xla", step_aux=None):
+             adaptive=False, gd_chunk=0, step_impl="xla", step_block_m=0,
+             step_aux=None):
     """Projected, preconditioned GD on Γ — pure traced function, shared by
     the per-layer jitted path and the scan-compiled sweep.
 
@@ -339,6 +355,8 @@ def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
     kernel on TPU, analytic jnp oracle elsewhere); the final Γ evaluation
     and the adaptive path's extra forward stay on the XLA ``loss``, so
     reported gammas are computed identically under both impls.
+    ``step_block_m``: the fused step's channel-tile size (0 = VMEM-budget
+    auto-sizing; kernels/era_step/kernel.py).
     ``step_aux``: a precomputed ``era_step.ops.build_aux(scn)`` — the
     scanned sweep hoists it out of the layer loop; None builds it here."""
 
@@ -352,7 +370,8 @@ def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
 
         def grad_fn(alloc):
             return _era_step_ops.era_step_value_and_grad(
-                scn, prof, s_vec, q, alloc, w, aux=aux)
+                scn, prof, s_vec, q, alloc, w, aux=aux,
+                block_m=step_block_m)
     else:
         grad_fn = jax.value_and_grad(loss)
     scales = _scales(scn.env)
@@ -423,7 +442,8 @@ def _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
 # Scenario/SplitProfile are registered pytrees, Weights is static, so one
 # compilation serves every layer's solve.
 _gd_solve = partial(jax.jit, static_argnames=("max_steps", "w", "adaptive",
-                                              "gd_chunk", "step_impl"))(
+                                              "gd_chunk", "step_impl",
+                                              "step_block_m"))(
     _gd_core)
 
 
@@ -449,7 +469,8 @@ def warm_start_predecessors(uplink_bits, warm_start: bool = True
 
 
 def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
-                adaptive=False, gd_chunk=0, step_impl="xla"):
+                adaptive=False, gd_chunk=0, step_impl="xla",
+                step_block_m=0):
     """The whole F+1 split sweep as one ``lax.scan`` (tentpole path).
 
     Carry = a stacked Allocation buffer with leading axis F+1, initialised
@@ -478,7 +499,8 @@ def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
         s_vec = jnp.full((u,), s, jnp.int32)
         res = _gd_core(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
                        adaptive=adaptive, gd_chunk=gd_chunk,
-                       step_impl=step_impl, step_aux=step_aux)
+                       step_impl=step_impl, step_block_m=step_block_m,
+                       step_aux=step_aux)
         buf = jax.tree.map(lambda b, a: b.at[s].set(a), buf, res.alloc)
         return buf, res
 
@@ -489,13 +511,15 @@ def _sweep_core(scn, q, x_init, pred, lr, tol, max_steps, w, prof,
 
 _sweep_scan = partial(jax.jit, static_argnames=("max_steps", "w",
                                                 "adaptive", "gd_chunk",
-                                                "step_impl"))(
+                                                "step_impl",
+                                                "step_block_m"))(
     _sweep_core)
 
 
 def _vmapped_sweep(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
                    adaptive=False, gd_chunk=0, step_impl="xla",
-                   prof_batched=False, x_init_batched=False):
+                   step_block_m=0, prof_batched=False,
+                   x_init_batched=False):
     """Unjitted vmap of the scanned sweep over a leading cell axis — the
     single shared definition of the batched sweep body.  Jitted directly
     as ``_sweep_batch`` (one device) and wrapped in ``shard_map`` by
@@ -510,15 +534,16 @@ def _vmapped_sweep(scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
     return jax.vmap(
         lambda scn, q, x0, pred, prf: _sweep_core(
             scn, q, x0, pred, lr, tol, max_steps, w, prf,
-            adaptive=adaptive, gd_chunk=gd_chunk, step_impl=step_impl),
+            adaptive=adaptive, gd_chunk=gd_chunk, step_impl=step_impl,
+            step_block_m=step_block_m),
         in_axes=(0, 0, 0 if x_init_batched else None, 0,
                  0 if prof_batched else None),
     )(scn_b, q_b, x_init, pred_b, prof)
 
 
 _sweep_batch = partial(jax.jit, static_argnames=(
-    "max_steps", "w", "adaptive", "gd_chunk", "step_impl", "prof_batched",
-    "x_init_batched"))(_vmapped_sweep)
+    "max_steps", "w", "adaptive", "gd_chunk", "step_impl", "step_block_m",
+    "prof_batched", "x_init_batched"))(_vmapped_sweep)
 
 
 def _per_user_cost(scn, prof, s_vec, alloc, q, w: Weights):
@@ -614,7 +639,7 @@ def _discretize_eval_batch(scn_b, s_user_b, hard_b, q_b, w, prof, f,
 
 def _finalize(scn, prof, q, w, stacked, gammas_np, iters_np, *, lr, tol,
               max_steps, adaptive, per_user_split,
-              step_impl="xla") -> LiGDOutcome:
+              step_impl="xla", step_block_m=0) -> LiGDOutcome:
     """Shared post-sweep discretisation: s* pick (+ optional ERA+ per-user
     split & polish), β rounding, SIC fallback, final Γ evaluation.
 
@@ -633,7 +658,7 @@ def _finalize(scn, prof, q, w, stacked, gammas_np, iters_np, *, lr, tol,
         # polish the allocation for the mixed split vector
         res = _gd_solve(scn, s_user, q, alloc_at(s_star), lr, tol,
                         max_steps, w, prof, adaptive=adaptive,
-                        step_impl=step_impl)
+                        step_impl=step_impl, step_block_m=step_block_m)
         alloc = res.alloc
     else:
         s_user = jnp.full((u,), s_star, jnp.int32)
@@ -688,23 +713,26 @@ def solve(scn, prof, q, w: Weights = Weights(), *, spec: SolverSpec = None,
                                  warm_start=spec.warm_start,
                                  per_user_split=spec.per_user_split,
                                  adaptive=spec.adaptive, x_init=x_init,
-                                 step_impl=spec.step_impl)
+                                 step_impl=spec.step_impl,
+                                 step_block_m=spec.step_block_m)
 
     pred = warm_start_predecessors(prof.uplink_bits, spec.warm_start)
     swept = _sweep_scan(scn, q, x_init, jnp.asarray(pred), spec.lr, spec.tol,
                         spec.max_steps, w, prof, adaptive=spec.adaptive,
-                        gd_chunk=spec.gd_chunk, step_impl=spec.step_impl)
+                        gd_chunk=spec.gd_chunk, step_impl=spec.step_impl,
+                        step_block_m=spec.step_block_m)
     return _finalize(scn, prof, q, w, swept.alloc,
                      np.asarray(swept.gamma), np.asarray(swept.iters),
                      lr=spec.lr, tol=spec.tol, max_steps=spec.max_steps,
                      adaptive=spec.adaptive,
                      per_user_split=spec.per_user_split,
-                     step_impl=spec.step_impl)
+                     step_impl=spec.step_impl,
+                     step_block_m=spec.step_block_m)
 
 
 def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
                       per_user_split, adaptive, x_init,
-                      step_impl="xla") -> LiGDOutcome:
+                      step_impl="xla", step_block_m=0) -> LiGDOutcome:
     """The seed-structured reference the compiled sweep is validated and
     benchmarked against: one jitted GD per layer with a NumPy round-trip in
     between, an eager per-user cost stack for ERA+, and eager
@@ -721,7 +749,8 @@ def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
         x0 = solved_alloc[pred[s]] if pred[s] < s else x_init
         s_vec = jnp.full((u,), s, jnp.int32)
         res = _gd_solve(scn, s_vec, q, x0, lr, tol, max_steps, w, prof,
-                        adaptive=adaptive, step_impl=step_impl)
+                        adaptive=adaptive, step_impl=step_impl,
+                        step_block_m=step_block_m)
         solved_alloc.append(res.alloc)
         gammas.append(float(res.gamma))      # host sync per layer
         iters.append(int(res.iters))
@@ -740,7 +769,7 @@ def _solve_sequential(scn, prof, q, w, *, lr, tol, max_steps, warm_start,
         # polish the allocation for the mixed split vector
         res = _gd_solve(scn, s_user, q, solved_alloc[s_star], lr, tol,
                         max_steps, w, prof, adaptive=adaptive,
-                        step_impl=step_impl)
+                        step_impl=step_impl, step_block_m=step_block_m)
         alloc = res.alloc
     else:
         s_user = jnp.full((u,), s_star, jnp.int32)
@@ -959,8 +988,8 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *,
             run_mesh, scn_sw, q_sw, x_init_sw, jnp.asarray(pred_sw),
             spec.lr, spec.tol, spec.max_steps, w, prof_sw,
             adaptive=spec.adaptive, gd_chunk=spec.gd_chunk,
-            step_impl=spec.step_impl, prof_batched=prof_batched,
-            x_init_batched=x_init_batched)
+            step_impl=spec.step_impl, step_block_m=spec.step_block_m,
+            prof_batched=prof_batched, x_init_batched=x_init_batched)
         if lane_perm is not None:
             # per-lane GD is frozen-by-select under vmap, so a lane's
             # result is independent of its co-resident lanes — inverting
@@ -975,6 +1004,7 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *,
                              spec.tol, spec.max_steps, w, prof_b,
                              adaptive=spec.adaptive, gd_chunk=spec.gd_chunk,
                              step_impl=spec.step_impl,
+                             step_block_m=spec.step_block_m,
                              prof_batched=prof_batched,
                              x_init_batched=x_init_batched)
 
@@ -1000,7 +1030,8 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *,
             _gd_solve(scn_list[b], s_user[b], q[b],
                       jax.tree.map(lambda x, b=b: x[b], x_star),
                       spec.lr, spec.tol, spec.max_steps, w, prof_list[b],
-                      adaptive=spec.adaptive, step_impl=spec.step_impl)
+                      adaptive=spec.adaptive, step_impl=spec.step_impl,
+                      step_block_m=spec.step_block_m)
             for b in range(n_cells)
         ]
         alloc_b = jax.tree.map(lambda *xs: jnp.stack(xs),

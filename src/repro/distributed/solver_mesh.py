@@ -70,7 +70,7 @@ _SWEEP_CACHE = {}
 
 
 def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, step_impl,
-                      prof_batched, x_init_batched):
+                      step_block_m, prof_batched, x_init_batched):
     """Build (and cache) the jitted shard_map'd sweep for one static
     configuration.  The cache key is exactly the static argument set —
     the same split the unsharded ``_sweep_batch`` jits over, plus the
@@ -78,8 +78,8 @@ def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, step_impl,
     collective-free: the fused step (kernels/era_step) is pure per-cell
     jnp/Pallas with no cross-lane reductions, so it drops inside the
     shard_map exactly like the autodiff body."""
-    key = (mesh, max_steps, w, adaptive, gd_chunk, step_impl, prof_batched,
-           x_init_batched)
+    key = (mesh, max_steps, w, adaptive, gd_chunk, step_impl, step_block_m,
+           prof_batched, x_init_batched)
     fn = _SWEEP_CACHE.get(key)
     if fn is not None:
         return fn
@@ -94,7 +94,8 @@ def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, step_impl,
         return ligd._vmapped_sweep(
             scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w, prof,
             adaptive=adaptive, gd_chunk=gd_chunk, step_impl=step_impl,
-            prof_batched=prof_batched, x_init_batched=x_init_batched)
+            step_block_m=step_block_m, prof_batched=prof_batched,
+            x_init_batched=x_init_batched)
 
     # check_rep=False: jax<=0.4 has no replication rule for `while`; every
     # output is cell-sharded anyway, so replication tracking buys nothing
@@ -110,7 +111,7 @@ def _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk, step_impl,
 
 def sharded_sweep(mesh, scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w,
                   prof, *, adaptive=False, gd_chunk=0, step_impl="xla",
-                  prof_batched=False, x_init_batched=False):
+                  step_block_m=0, prof_batched=False, x_init_batched=False):
     """Drop-in replacement for ``ligd._sweep_batch`` that runs the vmapped
     sweep under ``shard_map`` over ``mesh``'s ``cells`` axis.  Pads the
     lane count to a multiple of the shard count (repeat-last, exact per
@@ -127,7 +128,8 @@ def sharded_sweep(mesh, scn_b, q_b, x_init, pred_b, lr, tol, max_steps, w,
             prof = take(prof)
 
     fn = _sharded_sweep_fn(mesh, max_steps, w, adaptive, gd_chunk,
-                           step_impl, prof_batched, x_init_batched)
+                           step_impl, step_block_m, prof_batched,
+                           x_init_batched)
     swept = fn(scn_b, q_b, x_init, pred_b, jnp.float32(lr),
                jnp.float32(tol), prof)
     if idx is not None:

@@ -1,37 +1,67 @@
-"""Fused ERA GD step as a single Pallas TPU kernel launch.
+"""Fused ERA GD step as a single channel-tiled Pallas TPU launch.
 
 The innermost body of every Li-GD solve — NOMA SIC rates, QoE penalty, the
 scalar loss Γ and its gradient w.r.t. all five ``Allocation`` leaves —
 runs F+1 × ``max_steps`` × B times per admission round as ~30 separate XLA
 ops (plus their autodiff transposes).  This kernel evaluates the whole
-forward+backward in ONE launch: every operand is staged into VMEM once and
-the mask-matvec / log2 / sigmoid pipeline and its hand-derived transpose
-run back-to-back with zero intermediate HBM traffic — a custom-VJP-style
-fusion over the user axis.  SIC suffix interference is a masked matvec
-(``ref._sic_mask``, the same cancellation-free formulation noma_rate and
-core.noma use), so the kernel's hot ops are MXU dots over in-register 0/1
-masks; the backward is the transposed mask einsum (scatter- and
-gather-free, see ref.py).
+forward+backward in ONE launch with zero intermediate HBM traffic — a
+custom-VJP-style fusion over the user axis.  SIC suffix interference is a
+masked matvec (``ref._sic_mask``, the same cancellation-free formulation
+noma_rate and core.noma use), so the hot ops are MXU dots over
+in-register 0/1 masks; the backward is the transposed mask einsum
+(scatter- and gather-free, see ref.py).
 
-The kernel body calls ``ref.fused_step_math`` on its loaded blocks — the
-oracle and the kernel share one definition of the arithmetic, so the
+The kernel body calls ref.py's four block helpers on its loaded slabs —
+the oracle and the kernel share one definition of the arithmetic, so the
 kernel sweep (tests/test_era_step.py) validates Pallas plumbing and Mosaic
 lowering, while ref-vs-autodiff validates the math itself.
 
-Sizing: one grid step holds the full problem in VMEM.  At test scale
-(U≤64, M≤16, N≤4) that is a few hundred KiB; at paper scale (U=1250,
-M=250, N=5) the (N, M, U) cross-gain tensors dominate at ~6 MiB each in
-f32 — inside the ~16 MiB VMEM budget but with little headroom, so a
-channel-tiled grid (bm blocks of the M axis, like noma_rate) with a final
-cross-block reduction is the documented follow-up for paper scale.  The
-transient (M, U, U) SIC masks are never operands — they expand in VMEM
-from two (M, U) rows per link direction, one channel block at a time once
-the grid is tiled.
+Tiled grid
+----------
+Γ and every gradient leaf depend *nonlinearly* (sigmoid, max) on the
+per-user rate rows ``r_up``/``r_dn``, which are full-M reductions — so the
+M axis cannot be tiled in one sweep.  The grid is ``(2, nb)`` with
+``dimension_semantics=('arbitrary', 'arbitrary')`` (strictly sequential,
+lexicographic), i.e. two passes over the same ``nb = M/bm`` channel
+blocks:
 
-Operands and gradients are all f32 with no data-dependent indexing at all,
-precisely so this lowers to Mosaic as dots + elementwise ops — the one
-Pallas-hostile primitive family (dynamic lane gathers) was designed out at
-the ref.py level.
+  pass 0   each block streams its (bm, U) / (N, bm, U) operand slabs and
+           accumulates partial (1, U) rate rows into VMEM scratch
+           (``ref.up_rate_rows`` / ``dn_rate_rows``);
+  tail     at grid step (1, 0) the accumulated rows are complete: the
+           O(U) delay/energy/QoE/Γ tail runs once, emitting Γ, d_r, the
+           rate-independent d_p/d_pap rows, and the rate-row cotangents
+           ``g_rup``/``g_rdn`` into scratch;
+  pass 1   each block re-streams its slabs, recomputes its forward, and
+           writes its (bm, U) β-gradient block (``ref.up_block_grad`` /
+           ``dn_block_grad``) while accumulating (1, U) d_p/d_pap
+           partials into revisited output blocks (constant index map →
+           the row lives in VMEM across the whole grid, accumulated
+           in-place, copied out once at grid end).
+
+The (bm, U, U) SIC mask blocks expand in VMEM from two (bm, U) rank/gid
+rows per link direction — the O(M·U²) mask is never materialised in HBM
+at ANY block size, which is the whole point: ``bm`` bounds the transient.
+
+Sizing: ``block_vmem_bytes`` estimates one grid step's resident set —
+the two mask blocks dominate at 2·bm·U²·4 B; blocked operands and live
+temporaries add ~(34 + 2N)·bm·U·4 B, plus O(U) rows.  ``choose_block_m``
+picks the largest divisor of M under ``DEFAULT_VMEM_BUDGET`` (14 MiB —
+headroom under the ~16 MiB/core budget), degenerating to the untiled
+``bm = M`` single-block launch whenever the whole problem fits (all test
+scales) and to ``bm = 1`` at the paper's U=1250/M=250 (~12.3 MiB/step).
+An explicit ``block_m`` that does not divide M zero-pads the M axis to
+the next multiple — padded channels carry zero gain/β/rank rows, which
+contribute exactly 0.0 to every cross-block sum (rates and gradients), so
+padding is bitwise-neutral; the padded β-gradient rows are sliced off.
+
+Operands and gradients are all f32 with no data-dependent indexing at
+all, precisely so this lowers to Mosaic as dots + elementwise ops — the
+one Pallas-hostile primitive family (dynamic lane gathers) was designed
+out at the ref.py level.  Weights ride in the ``envp`` row (ref.ENV_LANES
+lanes), NOT as jit statics: sweeping tradeoff weights re-uses one
+compiled kernel (only ``block_m``/``interpret`` — true shape/lowering
+parameters — are static).
 """
 from __future__ import annotations
 
@@ -42,55 +72,174 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.era_step.ref import fused_step_math
+from repro.kernels.era_step import ref as _ref
+from repro.kernels.era_step.ref import (
+    BLOCKED_AXIS, N_OPERANDS, _BW, _NOISE)
 
-# operand count of fused_step_math (kernel refs appear in the same order)
-N_OPERANDS = 20
+# VMEM budget choose_block_m sizes against: 14 MiB of the ~16 MiB/core,
+# leaving headroom for Mosaic's own spills and the double-buffered
+# operand windows.
+DEFAULT_VMEM_BUDGET = 14 * 1024 * 1024
 
 
-def _kernel(*refs, w):
+def block_vmem_bytes(bm, u, n_aps):
+    """Estimated f32 VMEM resident set of ONE grid step at block size
+    ``bm``: the two (bm, U, U) SIC mask blocks, the blocked 2-D operand
+    slabs plus live per-direction temporaries (~34 rows of (bm, U)), the
+    two (N, bm, U) cross-gain slabs, and the O(U) scalar rows
+    (operands, outputs, scratch, one-hot, env)."""
+    masks = 2 * bm * u * u
+    rows_2d = (34 + 2 * n_aps) * bm * u
+    rows_1d = (24 + n_aps) * u + _ref.ENV_LANES
+    return 4 * (masks + rows_2d + rows_1d)
+
+
+def choose_block_m(m, u, n_aps, budget_bytes=DEFAULT_VMEM_BUDGET):
+    """Largest channel-block size whose grid step fits ``budget_bytes``:
+    ``m`` itself (the untiled single-block launch) when the whole problem
+    fits, else the largest divisor of ``m`` under budget (divisors avoid
+    the zero-pad remainder block; 1 always divides).  ``bm = 1`` is the
+    floor even if over budget — at that point U itself is the problem and
+    the caller should shard users, not channels."""
+    if block_vmem_bytes(m, u, n_aps) <= budget_bytes:
+        return m
+    best = 1
+    for bm in range(2, m):
+        if m % bm == 0 and block_vmem_bytes(bm, u, n_aps) <= budget_bytes:
+            best = bm
+    return best
+
+
+def _kernel(*refs):
     ins = refs[:N_OPERANDS]
-    gamma_ref, dbu_ref, dbd_ref, dp_ref, dpap_ref, dr_ref = refs[N_OPERANDS:]
-    gamma, (d_bu, d_bd, d_p, d_pap, d_r) = fused_step_math(
-        *(r[...] for r in ins), w=w)
-    gamma_ref[0, 0] = gamma
-    dbu_ref[...] = d_bu
-    dbd_ref[...] = d_bd
-    dp_ref[...] = d_p
-    dpap_ref[...] = d_pap
-    dr_ref[...] = d_r
+    (gamma_ref, dbu_ref, dbd_ref, dp_ref, dpap_ref,
+     dr_ref) = refs[N_OPERANDS:N_OPERANDS + 6]
+    rup_acc, rdn_acc, grup, grdn = refs[N_OPERANDS + 6:]
+    phase = pl.program_id(0)
+    b = pl.program_id(1)
+    envp = ins[10][...]
+    noise = envp[0, _NOISE]
+    bw = envp[0, _BW]
+
+    def up_args():
+        # (beta_up_t, p, own_up_t, h_up_r, onehot, up_rank, up_gid)
+        return (ins[0][...], ins[2][...], ins[11][...], ins[13][...],
+                ins[15][...], ins[16][...], ins[17][...])
+
+    def dn_args():
+        return (ins[1][...], ins[3][...], ins[12][...], ins[14][...],
+                ins[15][...], ins[18][...], ins[19][...])
+
+    @pl.when((phase == 0) & (b == 0))
+    def _init():
+        rup_acc[...] = jnp.zeros_like(rup_acc)
+        rdn_acc[...] = jnp.zeros_like(rdn_acc)
+        gamma_ref[...] = jnp.zeros_like(gamma_ref)
+        dp_ref[...] = jnp.zeros_like(dp_ref)
+        dpap_ref[...] = jnp.zeros_like(dpap_ref)
+        dr_ref[...] = jnp.zeros_like(dr_ref)
+
+    @pl.when(phase == 0)
+    def _pass0():
+        rup_acc[...] += _ref.up_rate_rows(*up_args(), noise, bw)
+        rdn_acc[...] += _ref.dn_rate_rows(*dn_args(), noise, bw)
+        # every output block gets defined bytes on its pass-0 visit, so
+        # copy-out never publishes garbage in either execution mode
+        dbu_ref[...] = jnp.zeros_like(dbu_ref)
+        dbd_ref[...] = jnp.zeros_like(dbd_ref)
+
+    @pl.when((phase == 1) & (b == 0))
+    def _tail():
+        gamma, g_rup, g_rdn, d_p0, d_pap0, d_r = _ref.tail_grads(
+            rup_acc[...], rdn_acc[...], ins[2][...], ins[3][...],
+            ins[4][...], ins[5][...], ins[6][...], ins[7][...],
+            ins[8][...], ins[9][...], envp)
+        gamma_ref[0, 0] = gamma
+        dr_ref[...] = d_r
+        dp_ref[...] += d_p0
+        dpap_ref[...] += d_pap0
+        grup[...] = g_rup
+        grdn[...] = g_rdn
+
+    @pl.when(phase == 1)
+    def _pass1():
+        d_bu, d_p_part = _ref.up_block_grad(*up_args(), noise, bw,
+                                            grup[...])
+        d_bd, d_pap_part = _ref.dn_block_grad(*dn_args(), noise, bw,
+                                              grdn[...])
+        dbu_ref[...] = d_bu
+        dbd_ref[...] = d_bd
+        dp_ref[...] += d_p_part
+        dpap_ref[...] += d_pap_part
 
 
-@functools.partial(jax.jit, static_argnames=("w", "interpret"))
-def era_step_fused(*operands, w, interpret=False):
-    """One fused forward+backward launch.  ``operands``: the 20 assembled
-    tensors of ``ref.fused_step_math`` (``ops._operands`` builds them).
-    Returns ``(gamma (1,1), d_beta_up_t, d_beta_dn_t, d_p, d_pap, d_r)``."""
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def era_step_fused(*operands, block_m=0, interpret=False):
+    """One fused forward+backward launch over a ``(2, nb)`` channel-tiled
+    grid.  ``operands``: the 20 assembled tensors of
+    ``ref.fused_step_math`` (``ops._operands`` builds them — weights
+    included, in the env row).  ``block_m``: channel rows per grid step;
+    0 auto-selects via ``choose_block_m`` (untiled whenever the problem
+    fits VMEM).  Returns
+    ``(gamma (1,1), d_beta_up_t, d_beta_dn_t, d_p, d_pap, d_r)``."""
     if len(operands) != N_OPERANDS:
         raise ValueError(f"expected {N_OPERANDS} operands, "
                          f"got {len(operands)}")
     m, u = operands[0].shape
+    n_aps = operands[15].shape[0]
+    bm = block_m if block_m > 0 else choose_block_m(m, u, n_aps)
+    bm = min(bm, m)
+    nb = -(-m // bm)
+    m_pad = nb * bm
+    if m_pad != m:
+        padded = []
+        for i, x in enumerate(operands):
+            ax = BLOCKED_AXIS.get(i)
+            if ax is None:
+                padded.append(x)
+            else:
+                widths = [(0, 0)] * x.ndim
+                widths[ax] = (0, m_pad - m)
+                padded.append(jnp.pad(x, widths))
+        operands = tuple(padded)
 
-    def spec(x):
-        zeros = (0,) * x.ndim
-        return pl.BlockSpec(x.shape, lambda *_, _z=zeros: _z)
+    def in_spec(i, x):
+        ax = BLOCKED_AXIS.get(i)
+        if ax is None:
+            zeros = (0,) * x.ndim
+            return pl.BlockSpec(x.shape, lambda p, b, _z=zeros: _z)
+        if ax == 0:
+            return pl.BlockSpec((bm, u), lambda p, b: (b, 0))
+        return pl.BlockSpec((n_aps, bm, u), lambda p, b: (0, b, 0))
 
     out_shapes = [
         jax.ShapeDtypeStruct((1, 1), jnp.float32),       # gamma
-        jax.ShapeDtypeStruct((m, u), jnp.float32),       # d beta_up_t
-        jax.ShapeDtypeStruct((m, u), jnp.float32),       # d beta_dn_t
+        jax.ShapeDtypeStruct((m_pad, u), jnp.float32),   # d beta_up_t
+        jax.ShapeDtypeStruct((m_pad, u), jnp.float32),   # d beta_dn_t
         jax.ShapeDtypeStruct((1, u), jnp.float32),       # d p
         jax.ShapeDtypeStruct((1, u), jnp.float32),       # d p_ap
         jax.ShapeDtypeStruct((1, u), jnp.float32),       # d r
     ]
-    return pl.pallas_call(
-        functools.partial(_kernel, w=w),
-        grid=(1,),
-        in_specs=[spec(x) for x in operands],
-        out_specs=[spec(jax.ShapeDtypeStruct(s.shape, s.dtype))
-                   for s in out_shapes],
+    out_specs = [
+        pl.BlockSpec((1, 1), lambda p, b: (0, 0)),
+        pl.BlockSpec((bm, u), lambda p, b: (b, 0)),
+        pl.BlockSpec((bm, u), lambda p, b: (b, 0)),
+        pl.BlockSpec((1, u), lambda p, b: (0, 0)),
+        pl.BlockSpec((1, u), lambda p, b: (0, 0)),
+        pl.BlockSpec((1, u), lambda p, b: (0, 0)),
+    ]
+    gamma, d_bu, d_bd, d_p, d_pap, d_r = pl.pallas_call(
+        _kernel,
+        grid=(2, nb),
+        in_specs=[in_spec(i, x) for i, x in enumerate(operands)],
+        out_specs=out_specs,
         out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((1, u), jnp.float32)] * 4,
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(*operands)
+    if m_pad != m:
+        d_bu = d_bu[:m]
+        d_bd = d_bd[:m]
+    return gamma, d_bu, d_bd, d_p, d_pap, d_r

@@ -91,8 +91,13 @@ def build_aux(scn) -> StepAux:
     )
 
 
-def _operands(scn, prof, s_vec, q, alloc, aux):
-    """The 20 positional operands of ``ref.fused_step_math``, in order."""
+def _operands(scn, prof, s_vec, q, alloc, aux, w):
+    """The 20 positional operands of ``ref.fused_step_math``, in order.
+
+    The env row packs the ``CellEnv`` scalars AND the ``Weights`` fields
+    (``ref.ENV_LANES`` lanes) — weights are traced DATA, so weight sweeps
+    share one kernel compile (the lowering-cache probe in
+    tests/test_era_step.py pins this)."""
     env = scn.env
     row = lambda x: jnp.asarray(x, jnp.float32)[None, :]          # (1, U)
     envp = jnp.stack([
@@ -103,8 +108,16 @@ def _operands(scn, prof, s_vec, q, alloc, aux):
         jnp.asarray(env.lambda_exponent, jnp.float32),
         jnp.asarray(env.xi_device, jnp.float32),
         jnp.asarray(env.xi_edge, jnp.float32),
+        jnp.asarray(w.w_t, jnp.float32),
+        jnp.asarray(w.w_q, jnp.float32),
+        jnp.asarray(w.w_r, jnp.float32),
+        jnp.asarray(w.qoe_a, jnp.float32),
+        jnp.asarray(w.t_scale, jnp.float32),
+        jnp.asarray(w.e_scale, jnp.float32),
+        jnp.asarray(w.r_cost_scale, jnp.float32),
         jnp.float32(0.0),
-    ])[None, :]                                                    # (1, 8)
+        jnp.float32(0.0),
+    ])[None, :]                                       # (1, ref.ENV_LANES)
     return (
         alloc.beta_up.T.astype(jnp.float32),
         alloc.beta_dn.T.astype(jnp.float32),
@@ -118,27 +131,34 @@ def _operands(scn, prof, s_vec, q, alloc, aux):
 
 
 def era_step_value_and_grad(scn, prof, s_vec, q, alloc, w, *, aux=None,
-                            impl=None, interpret=None):
+                            impl=None, interpret=None, block_m=0):
     """Fused ``(Γ, ∂Γ/∂Allocation)`` for one GD step.
 
     ``impl``: 'kernel' (Pallas launch), 'ref' (analytic jnp pipeline), or
     None = 'kernel' on TPU else 'ref' — the kernel in interpret mode is an
     emulator, far too slow for a solve's inner loop, so CPU/GPU runs get
     the same fused arithmetic via the oracle.  ``interpret`` defaults to
-    True off-TPU (kernel impl only).  Pass a precomputed ``aux``
-    (``build_aux``) when calling repeatedly on one scenario."""
+    True off-TPU (kernel impl only).  ``block_m``: channel-tile size —
+    0 (default) lets the kernel auto-size from its VMEM budget
+    (``kernel.choose_block_m``; the ref oracle stays untiled), > 0 forces
+    that block on both impls (the ref runs its tiled mirror, so CPU
+    backends reproduce the kernel's accumulation order exactly).  Pass a
+    precomputed ``aux`` (``build_aux``) when calling repeatedly on one
+    scenario."""
     if impl is None:
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if aux is None:
         aux = build_aux(scn)
-    operands = _operands(scn, prof, s_vec, q, alloc, aux)
+    operands = _operands(scn, prof, s_vec, q, alloc, aux, w)
     if impl == "ref":
-        gamma, grads = _ref.era_step_ref(*operands, w=w)
+        gamma, grads = _ref.era_step_ref(
+            *operands, block_m=block_m if block_m > 0 else None)
     elif impl == "kernel":
         from repro.kernels.era_step.kernel import era_step_fused
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        gamma, *grads = era_step_fused(*operands, w=w, interpret=interpret)
+        gamma, *grads = era_step_fused(*operands, block_m=block_m,
+                                       interpret=interpret)
     else:
         raise ValueError(f"impl must be 'kernel' or 'ref', got {impl!r}")
     d_bu, d_bd, d_p, d_pap, d_r = grads

@@ -9,11 +9,23 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API exists.
+    ``jax.sharding.AxisType`` arrived in JAX 0.5; on older runtimes (the
+    pinned 0.4.37 toolchain) every axis is implicitly Auto, so omitting
+    ``axis_types`` builds the identical mesh — the kwarg only matters for
+    Explicit/Manual axes, which nothing here uses."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -21,9 +33,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // max(data, 1)))
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e roofline constants (single chip)

@@ -138,6 +138,26 @@ def step_roofline(cost, peaks=None) -> dict:
     }
 
 
+def tiled_step_roofline(cost, *, n_blocks=1, block_vmem_bytes=None,
+                        vmem_budget=None, peaks=None) -> dict:
+    """``step_roofline`` plus the channel-tiled grid's residency columns.
+
+    The HLO cost already integrates over every grid step (the whole step's
+    traffic), so flops/write_bytes need no per-block scaling — the tile
+    columns answer the orthogonal question: how many M-blocks does the
+    launch sweep, and does ONE block's VMEM working set (masks + slabs,
+    ``kernels/era_step/kernel.block_vmem_bytes``) fit the budget.  This is
+    the paper-scale audit: at (U=1250, M=250) the untiled launch is ~50×
+    over any VMEM budget; the tiled grid's fit lands here as data."""
+    row = step_roofline(cost, peaks=peaks)
+    row["n_blocks"] = int(n_blocks)
+    if block_vmem_bytes is not None:
+        row["block_vmem_bytes"] = float(block_vmem_bytes)
+        if vmem_budget is not None:
+            row["block_vmem_fits"] = bool(block_vmem_bytes <= vmem_budget)
+    return row
+
+
 LEVERS = {
     ("compute", True): "useful ratio < 0.5: cut masked-attention waste "
                        "(flash kernel) / remat recompute",

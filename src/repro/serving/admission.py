@@ -356,10 +356,14 @@ class AdmissionController:
         arrivals, dirty = self.queue.drain()
         if not arrivals and not dirty:
             return None
-        if self._q is None:
-            raise RuntimeError("bootstrap() before running admission rounds")
         t_start = self.clock()
         with self._state_lock:
+            # bootstrap publishes _q under this lock; checking it out here
+            # (as this method once did) races a concurrent bootstrap into
+            # a half-initialised round instead of a clean error
+            if self._q is None:
+                raise RuntimeError(
+                    "bootstrap() before running admission rounds")
             for a in arrivals:
                 self._q[a.cell, a.user] = a.q_s
                 self._t_posted[a.cell, a.user] = a.t
@@ -392,14 +396,17 @@ class AdmissionController:
             iters = sum(s.iters for s in scheds)      # all B lanes solved
         version = self.engine.swap_schedules(per_cell)
 
-        with self._state_lock:
-            for b in touched:
-                self._ref[b] = solved[b]
         rnd = AdmissionRound(
             version=version, cells=tuple(touched),
             n_arrivals=len(arrivals), drift=drift, total_iters=iters,
             t_start=t_start, t_installed=self.clock())
-        self._last_round_t = rnd.t_installed
+        with self._state_lock:
+            for b in touched:
+                self._ref[b] = solved[b]
+            # _last_round_t is read lock-free-ish by the solver thread's
+            # batching window (_batching_wait_s snapshots it under this
+            # lock) — publish it under the same lock as every other writer
+            self._last_round_t = rnd.t_installed
         self.rounds.append(rnd)
         self.round_done.set()
         return rnd
@@ -476,7 +483,8 @@ class AdmissionController:
                 version=version, cells=(lane,), n_arrivals=0, drift={},
                 total_iters=sched.iters, t_start=now,
                 t_installed=self.clock())
-            self._last_round_t = rnd.t_installed
+            with self._state_lock:
+                self._last_round_t = rnd.t_installed
             self.rounds.append(rnd)
             self.round_done.set()
             return lane
@@ -526,7 +534,8 @@ class AdmissionController:
             rnd = AdmissionRound(
                 version=version, cells=(), n_arrivals=0, drift={},
                 total_iters=0, t_start=now, t_installed=self.clock())
-            self._last_round_t = rnd.t_installed
+            with self._state_lock:
+                self._last_round_t = rnd.t_installed
             self.rounds.append(rnd)
             self.round_done.set()
             return old_to_new
@@ -543,6 +552,20 @@ class AdmissionController:
             target=self._run, name="admission-solver", daemon=True)
         self._thread.start()
 
+    def _batching_wait_s(self) -> float:
+        """Seconds left in the batching window (<= 0: solve now).  The
+        ``_last_round_t`` snapshot is taken under ``_state_lock`` — every
+        writer (step / add_cell / remove_cell) publishes under the same
+        lock, so a churn op installing a round mid-read can never hand the
+        window an in-between timestamp (the old torn-read race)."""
+        if self.min_interval_s <= 0:
+            return 0.0
+        with self._state_lock:
+            last = self._last_round_t
+        if last is None:
+            return 0.0
+        return self.min_interval_s - (self.clock() - last)
+
     def _run(self) -> None:
         while True:
             has_work = self.queue.wait_for_work()
@@ -551,12 +574,10 @@ class AdmissionController:
                     # closed and fully drained -> exit
                     return
                 continue
-            if (self.min_interval_s > 0 and self._last_round_t is not None
-                    and not self.queue.closed):
+            if not self.queue.closed:
                 # batching window: keep accumulating arrivals until the
                 # interval elapses (interruptible so stop() drains promptly)
-                remaining = self.min_interval_s \
-                    - (self.clock() - self._last_round_t)
+                remaining = self._batching_wait_s()
                 if remaining > 0:
                     self._stopping.wait(remaining)
             try:

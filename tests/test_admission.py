@@ -33,7 +33,7 @@ class FakeClock:
 
 
 def _make(n_cells=2, n_users=6, n_subchannels=3, max_steps=5, seeds=None,
-          warm_start=True):
+          warm_start=True, **ctl_kw):
     ncfg = network.small_config(n_users=n_users, n_subchannels=n_subchannels)
     seeds = seeds or range(n_cells)
     scns = [network.make_scenario(jax.random.PRNGKey(s), ncfg)
@@ -45,7 +45,7 @@ def _make(n_cells=2, n_users=6, n_subchannels=3, max_steps=5, seeds=None,
     engine = MultiCellServeEngine(None, None, scns, sched)
     clock = FakeClock()
     ctl = AdmissionController(engine, clock=clock, drift_threshold=0.15,
-                              warm_start=warm_start)
+                              warm_start=warm_start, **ctl_kw)
     return engine, ctl, clock, scns
 
 
@@ -523,3 +523,84 @@ def test_queue_wait_for_work_wakes_on_close():
     q.close()
     t.join()
     assert woke.is_set()
+
+
+# --------------------------------------------- locking regressions (races)
+def test_step_before_bootstrap_raises_cleanly():
+    # the _q-is-None check runs under _state_lock now: a round racing a
+    # concurrent bootstrap gets this clean error, never a half-read state
+    engine, ctl, clock, _ = _make()
+    ctl.queue.mark_dirty(0)
+    with pytest.raises(RuntimeError, match="bootstrap"):
+        ctl.step()
+
+
+def test_batching_window_tracks_fake_clock():
+    engine, ctl, clock, _ = _make(min_interval_s=5.0)
+    # no window configured-away cases: before any round the loop must not
+    # wait at all (first arrival solves immediately)
+    assert ctl._batching_wait_s() == 0.0
+    ctl.bootstrap(_q0(ctl))
+    assert ctl._batching_wait_s() == 0.0      # bootstrap is not a round
+    ctl.submit(0, 1, 0.10)
+    ctl.step()
+    assert ctl._batching_wait_s() == pytest.approx(5.0)
+    clock.advance(3.0)
+    assert ctl._batching_wait_s() == pytest.approx(2.0)
+    clock.advance(3.0)
+    assert ctl._batching_wait_s() <= 0.0
+
+
+def test_batching_window_disabled_is_always_zero():
+    engine, ctl, clock, _ = _make()          # min_interval_s defaults to 0
+    ctl.bootstrap(_q0(ctl))
+    ctl.submit(0, 1, 0.10)
+    ctl.step()
+    assert ctl._batching_wait_s() == 0.0
+
+
+def test_churn_restarts_batching_window():
+    # add_cell / remove_cell install rounds too — each publishes
+    # _last_round_t under _state_lock, so the window restarts from churn
+    engine, ctl, clock, scns = _make(min_interval_s=5.0)
+    ctl.bootstrap(_q0(ctl))
+    clock.advance(10.0)
+    ncfg = network.small_config(n_users=6, n_subchannels=3)
+    joiner = network.make_scenario(jax.random.PRNGKey(99), ncfg)
+    lane = ctl.add_cell(joiner, np.full(6, 0.4, np.float32))
+    assert ctl._batching_wait_s() == pytest.approx(5.0)
+    clock.advance(10.0)
+    ctl.remove_cell(lane)
+    assert ctl._batching_wait_s() == pytest.approx(5.0)
+
+
+def test_concurrent_churn_and_producers_record_no_errors():
+    # bounded stress: a churn thread joining/evicting a cell while a
+    # producer thread posts arrivals and the solver thread runs rounds.
+    # Every shared-state touch is lock-disciplined now; the loop must end
+    # with zero recorded errors and a consistent lane count.
+    engine, ctl, clock, scns = _make()
+    ctl.bootstrap(_q0(ctl))
+    ncfg = network.small_config(n_users=6, n_subchannels=3)
+    joiner = network.make_scenario(jax.random.PRNGKey(7), ncfg)
+    ctl.start()
+
+    def churn():
+        for _ in range(3):
+            lane = ctl.add_cell(joiner, np.full(6, 0.4, np.float32))
+            ctl.remove_cell(lane)
+
+    def produce():
+        for i in range(12):
+            ctl.submit(i % 2, i % 6, 0.10 + 0.01 * i)
+
+    threads = [threading.Thread(target=churn),
+               threading.Thread(target=produce)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ctl.stop(drain=True)
+    assert ctl.errors == []
+    assert ctl.n_cells == 2
+    assert engine.n_cells == 2

@@ -27,7 +27,8 @@ from repro.core import era, ligd, network, profiles
 from repro.core.era import Weights
 from repro.kernels.era_step import ops as eops
 from repro.kernels.era_step import ref as eref
-from repro.kernels.era_step.kernel import era_step_fused
+from repro.kernels.era_step.kernel import (
+    DEFAULT_VMEM_BUDGET, block_vmem_bytes, choose_block_m, era_step_fused)
 
 pytestmark = pytest.mark.kernels
 
@@ -105,19 +106,139 @@ def test_sic_mask_semantics():
 
 
 # --------------------------------------------------------------- plumbing
+def _assert_leaves_close(grads_ref, grads_got, tol=1e-5):
+    for a, b in zip(grads_ref, grads_got):
+        scale = np.max(np.abs(np.asarray(a))) + 1e-30
+        np.testing.assert_allclose(np.asarray(b) / scale,
+                                   np.asarray(a) / scale, atol=tol)
+
+
 @pytest.mark.parametrize("interpret", INTERPRET_MODES)
 @pytest.mark.parametrize("u,m", [(8, 4), (16, 8), (32, 8)])
 def test_kernel_matches_ref(u, m, interpret):
     scn, prof, q, w, s_vec, alloc = _setup(u=u, m=m, seed=u + m)
     aux = eops.build_aux(scn)
-    operands = eops._operands(scn, prof, s_vec, q, alloc, aux)
-    g_ref, grads_ref = eref.era_step_ref(*operands, w=w)
-    g_ker, *grads_ker = era_step_fused(*operands, w=w, interpret=interpret)
+    operands = eops._operands(scn, prof, s_vec, q, alloc, aux, w)
+    g_ref, grads_ref = eref.era_step_ref(*operands)
+    g_ker, *grads_ker = era_step_fused(*operands, interpret=interpret)
+    np.testing.assert_allclose(float(g_ker[0, 0]), float(g_ref), rtol=1e-5)
+    _assert_leaves_close(grads_ref, grads_ker)
+
+
+# ------------------------------------------------------------- tiled grid
+def test_tiled_ref_matches_untiled():
+    """The block-decomposed tiled mirror reproduces the untiled oracle —
+    Γ and all five gradient leaves to f32 roundoff — including a remainder
+    block (m=6 with block_m=4 → blocks of 4 and 2)."""
+    scn, prof, q, w, s_vec, alloc = _setup(u=12, m=6, seed=7)
+    aux = eops.build_aux(scn)
+    operands = eops._operands(scn, prof, s_vec, q, alloc, aux, w)
+    g0, grads0 = eref.era_step_ref(*operands)
+    for bm in (1, 2, 3, 4):
+        g_t, grads_t = eref.era_step_ref(*operands, block_m=bm)
+        np.testing.assert_allclose(float(g_t), float(g0), rtol=1e-5)
+        _assert_leaves_close(grads0, grads_t)
+
+
+@pytest.mark.parametrize("interpret", INTERPRET_MODES)
+@pytest.mark.parametrize("bm", [1, 2, 3, 4])
+def test_tiled_kernel_matches_untiled_ref(bm, interpret):
+    """The (2, nb) two-pass kernel grid at every block size — divisible
+    (1, 2, 3 of m=6) and indivisible (4 → zero-padded remainder block) —
+    against the untiled oracle."""
+    scn, prof, q, w, s_vec, alloc = _setup(u=12, m=6, seed=11)
+    aux = eops.build_aux(scn)
+    operands = eops._operands(scn, prof, s_vec, q, alloc, aux, w)
+    g_ref, grads_ref = eref.era_step_ref(*operands)
+    g_ker, *grads_ker = era_step_fused(*operands, block_m=bm,
+                                       interpret=interpret)
     np.testing.assert_allclose(float(g_ker[0, 0]), float(g_ref), rtol=1e-5)
     for a, b in zip(grads_ref, grads_ker):
-        scale = np.max(np.abs(np.asarray(a))) + 1e-30
-        np.testing.assert_allclose(np.asarray(b) / scale,
-                                   np.asarray(a) / scale, atol=1e-5)
+        assert b.shape == a.shape        # padded rows sliced back off
+    _assert_leaves_close(grads_ref, grads_ker)
+
+
+def test_choose_block_m_budget():
+    """Auto-sizing: untiled whenever the whole problem fits the VMEM
+    budget (every test scale), the largest divisor of M under budget
+    otherwise, and under-budget per block at the paper's U=1250/M=250."""
+    assert choose_block_m(6, 12, 2) == 6          # test scale: untiled
+    assert choose_block_m(16, 64, 4) == 16
+    bm = choose_block_m(250, 1250, 5)
+    assert 250 % bm == 0 and bm < 250
+    assert block_vmem_bytes(bm, 1250, 5) <= DEFAULT_VMEM_BUDGET
+    # the O(M·U²) mask is the point of tiling: whole-problem residency
+    # would blow the budget by orders of magnitude
+    assert block_vmem_bytes(250, 1250, 5) > 50 * DEFAULT_VMEM_BUDGET
+    # monotone: block estimate grows with bm, so the chosen bm is maximal
+    assert block_vmem_bytes(bm, 1250, 5) < block_vmem_bytes(2 * bm, 1250, 5)
+
+
+def test_weight_sweep_shares_one_compile():
+    """Weights ride in the traced env row, not jit statics: distinct
+    weight triples must NOT recompile the kernel (the PR-5 recompile-churn
+    bug).  Probed via the jit lowering cache."""
+    scn, prof, q, _, s_vec, alloc = _setup(u=8, m=4, seed=5)
+    aux = eops.build_aux(scn)
+    era_step_fused.clear_cache()
+    for w in (Weights(), Weights(w_t=0.6, w_q=0.2, w_r=0.2),
+              Weights(w_t=0.1, w_q=0.1, w_r=0.8)):
+        operands = eops._operands(scn, prof, s_vec, q, alloc, aux, w)
+        era_step_fused(*operands, interpret=True)
+    assert era_step_fused._cache_size() == 1
+
+
+# ------------------------------------------------------------ paper scale
+def _paper_setup(u=1250, m=250, n_aps=5, seed=0):
+    cfg = network.small_config(n_users=u, n_subchannels=m, n_aps=n_aps)
+    scn = network.make_scenario(jax.random.PRNGKey(seed), cfg)
+    prof = profiles.get_profile("nin")
+    q = jnp.full((u,), 0.4)
+    w = Weights()
+    s_vec = jnp.full((u,), min(3, len(prof.device_flops) - 1),
+                     dtype=jnp.int32)
+    ks = jax.random.split(jax.random.PRNGKey(100 + seed), 5)
+    alloc = era.Allocation(
+        beta_up=jax.nn.softmax(jax.random.normal(ks[0], (u, m)), axis=1),
+        beta_dn=jax.nn.softmax(jax.random.normal(ks[1], (u, m)), axis=1),
+        p=jnp.exp(jax.random.normal(ks[2], (u,)) * 0.3) * 0.1,
+        p_ap=jnp.exp(jax.random.normal(ks[3], (u,)) * 0.3),
+        r=1.0 + jnp.exp(jax.random.normal(ks[4], (u,)) * 0.2))
+    return scn, prof, q, w, s_vec, alloc
+
+
+@pytest.mark.slow
+def test_paper_scale_tiled_ref_matches_untiled():
+    """Acceptance: at the paper's (U=1250, M=250) the tiled decomposition
+    (at the auto-chosen bm AND a remainder-forcing bm) matches the untiled
+    oracle to f32 roundoff on Γ and all five gradient leaves."""
+    scn, prof, q, w, s_vec, alloc = _paper_setup()
+    aux = eops.build_aux(scn)
+    operands = eops._operands(scn, prof, s_vec, q, alloc, aux, w)
+    g0, grads0 = eref.era_step_ref(*operands)
+    assert np.isfinite(float(g0))
+    bm_auto = choose_block_m(250, 1250, scn.cfg.n_aps)
+    for bm in {bm_auto, 64}:             # 64 ∤ 250 → short remainder block
+        g_t, grads_t = eref.era_step_ref(*operands, block_m=bm)
+        np.testing.assert_allclose(float(g_t), float(g0), rtol=1e-5)
+        _assert_leaves_close(grads0, grads_t, tol=1e-4)
+
+
+@pytest.mark.slow
+def test_paper_scale_tiled_kernel_interpret():
+    """The Pallas grid itself at paper scale (interpret mode, bm=64 →
+    nb=4 with a zero-padded remainder block) against the untiled oracle.
+    bm=64 rather than the auto bm: interpret mode emulates every grid
+    step, so 2×4 steps is tractable where 2×250 is not."""
+    scn, prof, q, w, s_vec, alloc = _paper_setup()
+    aux = eops.build_aux(scn)
+    operands = eops._operands(scn, prof, s_vec, q, alloc, aux, w)
+    g0, grads0 = eref.era_step_ref(*operands)
+    g_k, *grads_k = era_step_fused(*operands, block_m=64, interpret=True)
+    np.testing.assert_allclose(float(g_k[0, 0]), float(g0), rtol=1e-5)
+    for a, b in zip(grads0, grads_k):
+        assert b.shape == a.shape
+    _assert_leaves_close(grads0, grads_k, tol=1e-4)
 
 
 @pytest.mark.parametrize("interpret", INTERPRET_MODES)
@@ -185,12 +306,37 @@ def test_fused_solve_matches_xla_sharded(lane_placement):
             _assert_alloc_close(b.alloc, a.alloc, 1e-5)
 
 
+def test_fused_solve_tiled_matches_untiled():
+    """step_block_m tiles the fused step under a full solve: forcing a
+    block (including one that does not divide M) must leave the solve's
+    outcome at the untiled fused path's answer — the cross-block
+    reductions are plain f32 sums, so only roundoff-order differs."""
+    scn, prof, q, w, _, _ = _setup(seed=4)         # m=6
+    base = ligd.SolverSpec(tol=0.0, max_steps=40, step_impl="fused")
+    o0 = ligd.solve(scn, prof, q, w, spec=base)
+    for bm in (2, 4):                              # divisible + remainder
+        ot = ligd.solve(scn, prof, q, w,
+                        spec=base.replace(step_block_m=bm))
+        np.testing.assert_allclose(ot.gamma_by_layer, o0.gamma_by_layer,
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ot.s), np.asarray(o0.s))
+        _assert_alloc_close(ot.alloc, o0.alloc, 1e-5)
+
+
 # ------------------------------------------------------------ spec surface
 def test_spec_validates_step_impl_and_placement():
     with pytest.raises(ValueError):
         ligd.SolverSpec(step_impl="pallas")
     with pytest.raises(ValueError):
         ligd.SolverSpec(lane_placement="zigzag")
+    with pytest.raises(ValueError):
+        ligd.SolverSpec(step_block_m=-1)
+    with pytest.raises(ValueError):
+        # the block knob tiles the fused kernel's grid; meaningless (and
+        # so rejected) on the XLA autodiff step
+        ligd.SolverSpec(step_block_m=4)
+    assert ligd.SolverSpec(step_impl="fused", step_block_m=4).step_block_m \
+        == 4
     with pytest.raises(ValueError):
         # sorted placement permutes the batch before shard_map; it is
         # meaningless (and so rejected) off the sharded backend
