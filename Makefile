@@ -12,12 +12,16 @@
 # unified cluster API suite (SolverSpec + SplitInferenceCluster churn
 # lifecycle).  `make test-kernels` runs every Pallas kernel suite (kernels
 # marker) in interpret mode, under 4 forced host devices so the fused-step
-# sharded regressions see a real SPMD split.
+# sharded regressions see a real SPMD split.  `make test-multihost` runs
+# the multi-process `backend='multihost'` suite (gloo-coordinated worker
+# subprocesses — under the `distributed` marker budget, so plain
+# `make test` stays bounded); `make bench-multihost` lands the
+# weak-scaling + collective-byte audit in ./BENCH_multihost.json.
 PY := PYTHONPATH=src python
 SOLVER_DEVICES := XLA_FLAGS="--xla_force_host_platform_device_count=4"
 
 .PHONY: test test-fast test-serving test-solver test-cluster test-kernels \
-	test-distributed bench bench-quick
+	test-distributed test-multihost bench bench-quick bench-multihost
 
 test:
 	$(PY) -m pytest -q -m "not distributed"
@@ -27,6 +31,11 @@ test-fast:
 
 test-distributed:
 	$(PY) -m pytest -q -m distributed
+
+# multi-process multihost backend: single-process lanes + the gloo
+# subprocess equivalence/lifecycle cases (distributed marker)
+test-multihost:
+	$(PY) -m pytest -q tests/test_multihost_solver.py
 
 test-serving:
 	$(PY) -m pytest -q tests/test_serving.py tests/test_admission.py
@@ -48,3 +57,6 @@ bench:
 
 bench-quick:
 	$(PY) -m benchmarks.run --quick --json-dir .
+
+bench-multihost:
+	$(PY) -m benchmarks.run --only multihost --json-dir .

@@ -48,6 +48,18 @@ def emit(name, us, derived):
                     "derived": str(derived)})
 
 
+def emit_skip(name, reason):
+    """Record a measurement lane that did NOT run (missing artifacts,
+    failed subprocess, absent hardware).  Lands as ``<name>.skipped`` with
+    ``skipped: true`` so benchmarks/run.py can surface it loudly — a
+    BENCH json with silently-missing lanes reads as "covered" when it
+    wasn't."""
+    full = f"{name}.skipped"
+    print(f"{full},0.0,{reason}")
+    RECORDS.append({"name": full, "us_per_call": 0.0,
+                    "derived": str(reason), "skipped": True})
+
+
 def solve_era(scn, prof, q, max_steps=200, **kw):
     return ligd.solve(scn, prof, q, Weights(), max_steps=max_steps, **kw)
 

@@ -1,0 +1,167 @@
+"""Weak scaling of ``SolverSpec(backend='multihost')`` across emulated
+hosts: P coordinated processes × 2 forced host devices each, a fixed 4
+cells per host (so the GLOBAL batch grows with P), fused ERA step +
+chunked GD — the per-round ``solve_batch`` latency each process pays for
+its own lane slice, plus the HLO collective-byte audit of the compiled
+sweep (must be exactly 0: the body is collective-free and outputs stay on
+``P('cells')``, so adding hosts adds no interconnect traffic).
+
+Every P-lane (including P=1) runs in fresh subprocesses with
+``--xla_force_host_platform_device_count=2`` so the measurements differ
+only in process count; workers rendezvous through a gloo coordinator on a
+free localhost port and process 0 reports the timing (SPMD lockstep makes
+its wall clock include any straggler wait).
+
+Honesty note for the committed numbers: this rig has ONE physical core,
+so the P emulated hosts timeshare it and per-round wall time grows
+roughly linearly with P — weak-scaling efficiency far below 1 is the
+*emulation* overhead, not a property of the backend.  The lane exists to
+pin the contract (zero cross-host collective bytes, host-local outputs,
+per-round latency per host) and to give real multi-host rigs a harness
+where efficiency ≈ 1 is the pass line.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+
+from benchmarks.common import emit, emit_skip
+
+CELLS_PER_HOST = 4
+DEVICES_PER_HOST = 2
+GD_CHUNK = 8
+STEP_IMPL = "fused"
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# run via ``python -c`` so REPRO_MH_*/XLA_FLAGS take effect before any
+# backend initialisation; prints one machine-readable MH line on pid 0
+_WORKER = """
+import os, time
+import numpy as np
+from repro.distributed import multihost
+info = multihost.initialize_from_env()
+import jax, jax.numpy as jnp
+from repro.core import ligd, network, profiles
+from repro.core.era import Weights, uniform_alloc
+
+C = int(os.environ["MH_BENCH_CELLS"])
+reps = int(os.environ["MH_BENCH_REPS"])
+cfg = network.small_config(n_users=8, n_subchannels=4)
+prof = profiles.get_profile("nin")
+lo, hi = multihost.lane_slice(C)
+scns = [network.make_scenario(jax.random.PRNGKey(g), cfg)
+        for g in range(lo, hi)]
+q = jnp.full((C, cfg.n_users), 0.4)
+spec = ligd.SolverSpec(backend="multihost",
+                       max_steps=int(os.environ["MH_BENCH_STEPS"]),
+                       gd_chunk=int(os.environ["MH_BENCH_CHUNK"]),
+                       step_impl=os.environ["MH_BENCH_STEP_IMPL"],
+                       per_user_split=False)
+ligd.solve_batch(scns, prof, q, spec=spec)          # compile + warm
+ts = []
+for _ in range(reps):
+    t0 = time.perf_counter()
+    ligd.solve_batch(scns, prof, q, spec=spec)
+    ts.append(time.perf_counter() - t0)
+us = float(np.median(ts)) * 1e6
+# the audit lowers the same SPMD module on every process in lockstep
+prep = ligd.prepare_batch(scns, prof, True)
+cost = multihost.sweep_collective_cost(
+    spec.run_mesh(), prep.scn_b, q, uniform_alloc(scns[0]),
+    jnp.asarray(prep.pred_b), spec.lr, spec.tol, spec.max_steps,
+    Weights(), prep.prof_b, gd_chunk=spec.gd_chunk,
+    step_impl=spec.step_impl)
+if info.process_id == 0:
+    print(f"MH,{us:.1f},{cost.total_coll_bytes:.0f},"
+          f"{info.n_processes},{info.n_global_devices}")
+"""
+
+
+def _free_port():
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _worker_env(quick, extra):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{DEVICES_PER_HOST}").strip()
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["JAX_PLATFORMS"] = "cpu"
+    env.update({"MH_BENCH_CELLS": str(CELLS_PER_HOST),
+                "MH_BENCH_REPS": "3" if quick else "5",
+                "MH_BENCH_STEPS": "60" if quick else "120",
+                "MH_BENCH_CHUNK": str(GD_CHUNK),
+                "MH_BENCH_STEP_IMPL": STEP_IMPL})
+    env.update(extra)
+    return env
+
+
+def _measure(n_procs, quick):
+    """(median round µs, collective bytes, global devices) from a P-process
+    run, or None when a worker fails.  P=1 needs no coordinator — the
+    backend degenerates to the single-process sharded path."""
+    procs = []
+    mh_env = {}
+    if n_procs > 1:
+        port = _free_port()
+        mh_env = {"REPRO_MH_COORDINATOR": f"localhost:{port}",
+                  "REPRO_MH_NUM_PROCESSES": str(n_procs)}
+    for pid in range(n_procs):
+        env = _worker_env(quick, dict(
+            mh_env, **({"REPRO_MH_PROCESS_ID": str(pid)} if n_procs > 1
+                       else {})))
+        procs.append(subprocess.Popen([sys.executable, "-c", _WORKER],
+                                      cwd=_ROOT, env=env,
+                                      stdout=subprocess.PIPE,
+                                      stderr=subprocess.PIPE, text=True))
+    try:
+        outs = [p.communicate(timeout=1800) for p in procs]
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        return None
+    for p, (out, err) in zip(procs, outs):
+        if p.returncode != 0:
+            lines = err.strip().splitlines() if err else []
+            print(f"# multihost worker rc={p.returncode}: "
+                  f"{lines[-1][:160] if lines else '?'}", file=sys.stderr)
+            return None
+    for out, _ in outs:                      # pid 0's MH line
+        for line in out.splitlines():
+            if line.startswith("MH,"):
+                _, us, coll, nproc, ndev = line.split(",")
+                return float(us), float(coll), int(ndev)
+    return None
+
+
+def run(quick=False):
+    t_base = None
+    for n_procs in ((1, 2) if quick else (1, 2, 4)):
+        res = _measure(n_procs, quick)
+        if res is None:
+            emit_skip(f"multihost.round_p{n_procs}", "worker failed")
+            continue
+        us, coll, ndev = res
+        b_global = CELLS_PER_HOST * n_procs
+        emit(f"multihost.round_p{n_procs}_c{CELLS_PER_HOST}_us", us,
+             f"{n_procs}proc x {DEVICES_PER_HOST}dev, B={b_global}")
+        emit(f"multihost.coll_bytes_p{n_procs}", 0.0, f"{coll:.0f}")
+        if n_procs == 1:
+            t_base = us
+        elif t_base is not None:
+            # fixed per-host work: ideal multihost keeps round time flat
+            emit(f"multihost.weak_efficiency_p{n_procs}", 0.0,
+                 f"{t_base / us:.2f}")
+
+
+if __name__ == "__main__":
+    run("--quick" in sys.argv)

@@ -2,13 +2,25 @@
 terms on 16×16 (256 chips) vs 2×16×16 (512 chips).  Training should halve
 per-chip compute/memory (data-parallel across the pod axis) while the
 gradient all-reduce crosses the pod boundary; decode should be ~unchanged
-(requests shard over data, not pod)."""
+(requests shard over data, not pod).
+
+This module only READS ``experiments/dryrun/*.json``; it never launches
+the dry runs itself.  Regenerate the artifacts with
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+(``--both-meshes`` runs each (arch, shape) on the 16×16 AND 2×16×16
+meshes; a plain ``--all`` produces only one mesh per pair and every pair
+is reported skipped).  When artifacts
+are missing the lanes land as ``*.skipped`` records — benchmarks/run.py
+echoes them on stderr so a BENCH json with no ratios is never mistaken
+for a clean run."""
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_skip
 
 DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
@@ -24,7 +36,8 @@ PAIRS = [
 
 def run(quick=False):
     if not DRYRUN.exists():
-        emit("multipod.skipped", 0.0, "no dryrun artifacts")
+        emit_skip("multipod", "no dryrun artifacts — see module "
+                  "docstring for the regeneration command")
         return
     for arch, shape in (PAIRS[:3] if quick else PAIRS):
         recs = {}
@@ -35,6 +48,9 @@ def run(quick=False):
                 if r.get("ok"):
                     recs[mesh] = r["per_chip"]
         if len(recs) != 2:
+            missing = [m for m in ("16x16", "2x16x16") if m not in recs]
+            emit_skip(f"multipod.{arch}.{shape}",
+                      f"missing dryrun mesh(es): {','.join(missing)}")
             continue
         a, b = recs["16x16"], recs["2x16x16"]
         emit(f"multipod.flops_ratio.{arch}.{shape}", 0.0,

@@ -25,6 +25,7 @@ MODULES = [
     ("ligd", "benchmarks.ligd_convergence"),
     ("batched", "benchmarks.batched_solver"),
     ("sharded", "benchmarks.sharded_solver"),
+    ("multihost", "benchmarks.multihost_solver"),
     ("eraplus", "benchmarks.era_plus"),
     ("kernels", "benchmarks.kernel_bench"),
     ("era_step", "benchmarks.era_step"),
@@ -45,6 +46,11 @@ def git_sha() -> str:
         ).stdout.strip() or "unknown"
     except Exception:  # noqa: BLE001 — benchmarks must run without git
         return "unknown"
+
+
+def skipped_of(records):
+    """Names+reasons of lanes a module recorded via ``common.emit_skip``."""
+    return [(r["name"], r["derived"]) for r in records if r.get("skipped")]
 
 
 def write_json(tag: str, modname: str, records, *, quick: bool,
@@ -70,6 +76,11 @@ def write_json(tag: str, modname: str, records, *, quick: bool,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "records": list(records),
     }
+    # skipped lanes surfaced at the top level too, so a reader (or diff)
+    # does not have to scan every record to notice partial coverage
+    skipped = skipped_of(records)
+    if skipped:
+        payload["skipped"] = [{"name": n, "reason": r} for n, r in skipped]
     # quick runs land under a distinct name so trimmed-sweep numbers can
     # never silently clobber a committed full-run BENCH_<tag>.json
     suffix = ".quick.json" if quick else ".json"
@@ -95,6 +106,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    all_skipped = []
     for tag, modname in MODULES:
         if args.only and args.only not in tag:
             continue
@@ -106,7 +118,15 @@ def main() -> None:
         path = write_json(tag, modname, common.RECORDS, quick=args.quick,
                           elapsed_s=dt, json_dir=args.json_dir)
         print(f"# {tag} done in {dt:.1f}s -> {path}", file=sys.stderr)
+        for name, reason in skipped_of(common.RECORDS):
+            print(f"# !! {tag}: SKIPPED {name} ({reason})", file=sys.stderr)
+            all_skipped.append((tag, name, reason))
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    if all_skipped:
+        print(f"# !! {len(all_skipped)} lane(s) did not run:",
+              file=sys.stderr)
+        for tag, name, reason in all_skipped:
+            print(f"# !!   {tag}/{name}: {reason}", file=sys.stderr)
 
 
 if __name__ == "__main__":

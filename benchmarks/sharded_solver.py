@@ -3,10 +3,15 @@
   1. chunked GD (``gd_chunk``) vs the vmapped ``while_loop`` reference, on
      a uniform workload (identical cells — lockstep costs nothing) and a
      convergence-skewed one (one slow cell drags every lane);
-  2. bucketed partial-batch admission: device cost of a k-dirty-cell round
+  2. step implementation: the Pallas-fused ERA GD step (``step_impl=
+     'fused'``) vs the plain XLA step, crossed with both loop drivers
+     (``while_loop`` and chunked GD) — the lane that keeps
+     BENCH_sharded.json honest about which step kernel the other numbers
+     were measured with;
+  3. bucketed partial-batch admission: device cost of a k-dirty-cell round
      (``MultiCellScheduler.schedule(cells=...)``) vs the full-B solve it
      replaces;
-  3. multi-device scaling: B cells sharded over a ``cells`` mesh
+  4. multi-device scaling: B cells sharded over a ``cells`` mesh
      (``SolverSpec(backend="sharded")``) vs the single-device vmapped
      solve.  When
      the process only sees one device (the default CPU run), this part
@@ -80,6 +85,28 @@ def _chunked_vs_while(cfg, prof, qs, reps, quick):
         emit(f"sharded.gd_chunk{GD_CHUNK}_us.{tag}", us_chunk, "")
         emit(f"sharded.gd_chunk_speedup.{tag}", 0.0,
              f"{us_while / us_chunk:.3f}x")
+
+
+def _step_impl_lanes(cfg, prof, qs, reps, quick):
+    """while/chunked × xla/fused grid on the varied workload — isolates
+    the fused-step win from the loop-driver choice."""
+    b = qs.shape[0]
+    scns = _cells(cfg, b)
+    base = ligd.SolverSpec(max_steps=150 if quick else 400,
+                           per_user_split=False)
+    us = {}
+    for loop, loop_kw in (("while", dict()),
+                          ("chunked", dict(backend="chunked",
+                                           gd_chunk=GD_CHUNK))):
+        for impl in ("xla", "fused"):
+            spec = base.replace(step_impl=impl, **loop_kw)
+            ligd.solve_batch(scns, prof, qs, spec=spec)          # warm
+            us[loop, impl] = _median_time(
+                lambda s=spec: ligd.solve_batch(scns, prof, qs, spec=s),
+                reps)
+            emit(f"sharded.step_{impl}_{loop}_us", us[loop, impl], "")
+        emit(f"sharded.step_fused_speedup.{loop}", 0.0,
+             f"{us[loop, 'xla'] / us[loop, 'fused']:.3f}x")
 
 
 def _bucketed_rounds(cfg, prof, qs, reps, quick):
@@ -175,6 +202,7 @@ def run(quick=False):
     reps = 3 if quick else 5
 
     _chunked_vs_while(cfg, prof, qs, reps, quick)
+    _step_impl_lanes(cfg, prof, qs, reps, quick)
     _bucketed_rounds(cfg, prof, qs, reps, quick)
     if len(jax.devices()) > 1:
         _device_scaling(cfg, prof, qs, reps, quick)

@@ -55,7 +55,13 @@ picks the sweep engine:
                   identical to reference);
   ``sharded``   — the chunked-or-while sweep under ``shard_map`` over a
                   ``cells`` device mesh (``spec.mesh``, default: all
-                  visible devices).
+                  visible devices);
+  ``multihost`` — the SAME sharded sweep over a ``jax.distributed``
+                  GLOBAL device mesh: every process passes its own
+                  lanes, the compiled SPMD program spans all hosts with
+                  ~0 cross-host bytes, and each process gets back only
+                  its lanes' outcomes (``distributed.multihost``;
+                  single-process it degenerates to ``sharded`` exactly).
 
 Static vs traced argument split, in ``SolverSpec`` terms (applies to
 ``_sweep_scan``, the chunked sweep, the ``solver_mesh`` sharded sweep, and
@@ -103,7 +109,7 @@ from repro.core import network, noma, profiles
 from repro.core.era import (Allocation, Terms, Weights, clip_alloc,
                             round_beta, uniform_alloc, utility)
 
-_BACKENDS = ("reference", "chunked", "sharded")
+_BACKENDS = ("reference", "chunked", "sharded", "multihost")
 _BUCKETS = ("pow2", "exact", "full")
 _STEP_IMPLS = ("xla", "fused")
 _PLACEMENTS = ("none", "sorted")
@@ -127,11 +133,13 @@ class SolverSpec:
     replacing the per-call kwarg sprawl the pre-spec API grew.
 
     Fields:
-      backend         'reference' | 'chunked' | 'sharded' (module docs).
+      backend         'reference' | 'chunked' | 'sharded' | 'multihost'
+                      (module docs).
       gd_chunk        inner-GD scan segment length.  0 on 'reference'
                       (enforced); 'chunked' defaults it to
-                      ``DEFAULT_GD_CHUNK`` when left at 0; 'sharded'
-                      composes with either (0 = while_loop per shard).
+                      ``DEFAULT_GD_CHUNK`` when left at 0; 'sharded' and
+                      'multihost' compose with either (0 = while_loop
+                      per shard).
       lr / tol /
       max_steps       the GD knobs of Table I (step size, stop test,
                       iteration budget).
@@ -150,8 +158,13 @@ class SolverSpec:
                       'pow2' (1/2/4/…/B ladder, O(log B) compiled
                       variants), 'exact' (no padding, one compile per
                       subset size), 'full' (always solve all B lanes).
-      mesh            explicit ``jax.Mesh`` for 'sharded' (None = build a
-                      ``cells`` mesh over every visible device at use).
+      mesh            explicit ``jax.Mesh`` for 'sharded'/'multihost'
+                      (None = build a ``cells`` mesh at use: over every
+                      visible device for 'sharded', over the GLOBAL
+                      ``jax.distributed`` device set for 'multihost' —
+                      ``multihost.global_cells_mesh``, which must span
+                      every process's devices; single-process the two
+                      defaults are the identical memoised Mesh object).
       step_impl       'xla' (autodiff value_and_grad — the reference) |
                       'fused' (the one-launch fused forward+backward GD
                       step, kernels/era_step: Pallas kernel on TPU, the
@@ -202,8 +215,10 @@ class SolverSpec:
         if self.backend == "reference" and self.gd_chunk:
             raise ValueError("backend='reference' runs the while_loop GD; "
                              "use backend='chunked' for gd_chunk>0")
-        if self.mesh is not None and self.backend != "sharded":
-            raise ValueError("mesh= only applies to backend='sharded'")
+        if self.mesh is not None and self.backend not in ("sharded",
+                                                          "multihost"):
+            raise ValueError("mesh= only applies to backend='sharded' "
+                             "or 'multihost'")
         if not self.compiled_sweep and self.backend != "reference":
             raise ValueError("compiled_sweep=False (per-layer reference "
                              "loop) only composes with backend='reference'")
@@ -214,6 +229,9 @@ class SolverSpec:
             raise ValueError(f"lane_placement must be one of {_PLACEMENTS},"
                              f" got {self.lane_placement!r}")
         if self.lane_placement == "sorted" and self.backend != "sharded":
+            # multihost rejects it too: a global permutation would need
+            # every host to see every lane's iteration history — exactly
+            # the cross-host traffic the backend exists to avoid
             raise ValueError("lane_placement='sorted' permutes lanes "
                              "across mesh shards — it only applies to "
                              "backend='sharded'")
@@ -235,15 +253,19 @@ class SolverSpec:
         return _dc_replace(self, **kw)
 
     def run_mesh(self):
-        """The mesh a ``sharded`` solve runs on (None for other backends);
-        an unset mesh resolves to a ``cells`` mesh over every visible
-        device.  ``solver_mesh.cells_mesh`` caches the all-devices default,
-        so repeated resolution returns the identical Mesh object and the
-        sharded sweep's jit cache keys stay stable."""
-        if self.backend != "sharded":
+        """The mesh a ``sharded``/``multihost`` solve runs on (None for
+        the single-device backends); an unset mesh resolves to a
+        ``cells`` mesh over every visible device ('sharded') or the
+        global ``jax.distributed`` device set ('multihost').  Both
+        resolvers memoise, so repeated resolution returns the identical
+        Mesh object and the sweep's jit cache keys stay stable."""
+        if self.backend not in ("sharded", "multihost"):
             return None
         if self.mesh is not None:
             return self.mesh
+        if self.backend == "multihost":
+            from repro.distributed import multihost
+            return multihost.global_cells_mesh()
         from repro.distributed import solver_mesh
         return solver_mesh.cells_mesh()
 
@@ -701,9 +723,10 @@ def solve(scn, prof, q, w: Weights = Weights(), *, spec: SolverSpec = None,
                          max_steps=max_steps, warm_start=warm_start,
                          per_user_split=per_user_split, adaptive=adaptive,
                          compiled_sweep=compiled_sweep, gd_chunk=gd_chunk)
-    if spec.backend == "sharded":
-        raise ValueError("backend='sharded' shards a CELL axis — use "
-                         "solve_batch (single-cell solve has no cell axis)")
+    if spec.backend in ("sharded", "multihost"):
+        raise ValueError(f"backend={spec.backend!r} shards a CELL axis — "
+                         "use solve_batch (single-cell solve has no cell "
+                         "axis)")
     x_init = (soften_beta(scn, init_alloc) if init_alloc is not None
               else uniform_alloc(scn, rng=key))
 
@@ -894,6 +917,18 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *,
                            final output gather; lanes are padded
                            (repeat-last) to a multiple of the mesh size
                            and padding outcomes dropped.
+      backend='multihost'  the same sharded sweep over the GLOBAL
+                           ``jax.distributed`` device mesh.  ``scns``/
+                           ``q``/``init_alloc`` are THIS process's lanes;
+                           every process must call with the same local
+                           lane count and the same statics at the same
+                           point (one SPMD program spans all hosts), and
+                           each gets back outcomes for its own lanes
+                           only.  Lane padding is per host, the compiled
+                           program moves ~0 bytes across hosts, and
+                           single-process the path is bitwise
+                           ``backend='sharded'`` (``distributed.
+                           multihost`` module docs).
 
     Legacy kwargs (``gd_chunk=``/``mesh=``/``compiled_sweep=`` plus the
     numeric knobs) still work through a deprecation shim that folds them
@@ -967,7 +1002,20 @@ def solve_batch(scns, prof, q, w: Weights = Weights(), *,
     u = q.shape[1]
 
     run_mesh = spec.run_mesh()
-    if run_mesh is not None:
+    if spec.backend == "multihost":
+        from repro.distributed import multihost
+        # host-local lanes in, host-local lanes out: the finalize tail
+        # below sees exactly this process's B lanes either way, so it is
+        # shared verbatim with the single-process backends.  No
+        # _LANE_ITERS recording — lane_placement='sorted' is rejected
+        # for multihost (cross-host history would defeat the point).
+        swept = multihost.multihost_sweep(
+            run_mesh, scn_b, q, x_init, jnp.asarray(pred_b),
+            spec.lr, spec.tol, spec.max_steps, w, prof_b,
+            adaptive=spec.adaptive, gd_chunk=spec.gd_chunk,
+            step_impl=spec.step_impl, step_block_m=spec.step_block_m,
+            prof_batched=prof_batched, x_init_batched=x_init_batched)
+    elif run_mesh is not None:
         from repro.distributed import solver_mesh
         lane_perm = None
         if spec.lane_placement == "sorted":

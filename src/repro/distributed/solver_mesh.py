@@ -32,6 +32,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ligd, network
+from repro.launch.mesh import _make_mesh
 
 CELL_AXIS = "cells"
 
@@ -40,16 +41,19 @@ _MESH_CACHE = {}
 
 
 def cells_mesh(n_devices: int = None):
-    """1-D mesh over the solver's cell axis.  ``n_devices=None`` uses every
-    visible device; a smaller request uses a prefix of them.  Memoised per
-    device count, so ``SolverSpec.run_mesh()``'s lazy all-devices default
-    resolves to the identical Mesh object on every call and the sharded
-    sweep's jit cache never splinters."""
+    """1-D mesh over the solver's cell axis — THIS process's devices
+    (``distributed.multihost.global_cells_mesh`` is the all-process
+    variant).  ``n_devices=None`` uses every visible device; a smaller
+    request uses a prefix of them.  Memoised per device count, so
+    ``SolverSpec.run_mesh()``'s lazy all-devices default resolves to the
+    identical Mesh object on every call and the sharded sweep's jit cache
+    never splinters.  Built through the ``_make_mesh`` AxisType shim
+    (0.4.x floor — see launch/mesh.py)."""
     n_avail = len(jax.devices())
     n = n_avail if n_devices is None else max(1, min(n_devices, n_avail))
     mesh = _MESH_CACHE.get(n)
     if mesh is None:
-        mesh = _MESH_CACHE[n] = jax.make_mesh((n,), (CELL_AXIS,))
+        mesh = _MESH_CACHE[n] = _make_mesh((n,), (CELL_AXIS,))
     return mesh
 
 
@@ -142,9 +146,10 @@ def solve_batch_sharded(scns, prof, q, *args, mesh=None, spec=None, **kw):
     device when ``mesh`` is None).  The sharded backend's convenience
     entry: with ``spec=`` the spec is re-pinned to ``backend='sharded'``
     on this mesh; otherwise legacy kwargs flow through ``solve_batch``'s
-    deprecation shim.  The ``SolverSpec.backend`` seam is the intended
-    fleet-scale extension point — a future multi-host backend slots in
-    here without touching the serving layer."""
+    deprecation shim.  The ``SolverSpec.backend`` seam is the fleet-scale
+    extension point — ``backend='multihost'`` (distributed/multihost.py)
+    runs this same sweep over a ``jax.distributed`` global mesh without
+    touching the serving layer."""
     mesh = cells_mesh() if mesh is None else mesh
     if spec is not None:
         spec = spec.replace(backend="sharded", mesh=mesh)

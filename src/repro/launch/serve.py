@@ -87,10 +87,14 @@ def main():
                     help="Gauss-Markov channel memory per round")
     ap.add_argument("--drift-threshold", type=float, default=0.15,
                     help="divergence past which a cell is re-scheduled")
-    ap.add_argument("--backend", choices=["reference", "chunked", "sharded"],
+    ap.add_argument("--backend",
+                    choices=["reference", "chunked", "sharded", "multihost"],
                     default=None,
                     help="SolverSpec backend (default: reference, or "
-                         "chunked when --gd-chunk is set)")
+                         "chunked when --gd-chunk is set).  multihost "
+                         "joins the jax.distributed runtime from the "
+                         "REPRO_MH_* env vars (single-process: identical "
+                         "to sharded)")
     ap.add_argument("--gd-chunk", type=int, default=0,
                     help="chunked lockstep-free GD segment length "
                          "(0 = while_loop reference)")
@@ -110,6 +114,14 @@ def main():
                          "schedule carry-over + version continuity")
     args = ap.parse_args()
 
+    if args.backend == "multihost":
+        # must precede ANY jax device-state touch (model init below)
+        from repro.distributed import multihost
+        info = multihost.initialize_from_env()
+        print(f"multihost solver: process {info.process_id}/"
+              f"{info.n_processes}, {info.n_local_devices} local / "
+              f"{info.n_global_devices} global devices")
+
     import jax
     import jax.numpy as jnp
 
@@ -127,8 +139,8 @@ def main():
                                 n_subchannels=args.subchannels)
     prof = profiles.transformer_profile(cfg, seq=args.seq_len)
     spec = build_spec(args)
-    if spec.backend == "sharded":
-        print(f"sharded solver: "
+    if spec.backend in ("sharded", "multihost"):
+        print(f"{spec.backend} solver: "
               f"{spec.run_mesh().shape['cells']}-device cells mesh")
 
     def make_tokens(k, n):
@@ -281,7 +293,7 @@ def main():
         return 0
 
     scn = network.make_scenario(jax.random.fold_in(key, 1), ncfg)
-    if spec.backend == "sharded":
+    if spec.backend in ("sharded", "multihost"):
         # one cell has no cell axis to shard — drop to the equivalent
         # single-device backend
         spec = spec.replace(mesh=None,

@@ -374,7 +374,13 @@ class AdmissionController:
             # move again while the solve runs, and the drift reference must
             # be the state the installed schedule was solved ON
             solved = list(self._live)
-            partial = self.partial_batch and len(touched) < self.n_cells
+            # multi-process multihost schedulers route EVERY incremental
+            # round through the bucketed subset path (host-local solves):
+            # a full-mesh SPMD solve needs all processes in lockstep,
+            # which this host's arrival/drift queue cannot arrange
+            partial = self.partial_batch and (
+                len(touched) < self.n_cells
+                or getattr(self.scheduler, "host_local_rounds", False))
             q = self._effective_q_locked(t_start)
 
         # outside the lock: scheduler state belongs to this (single-

@@ -43,6 +43,16 @@ controller's round lock and acquires it BEFORE the facade lock, so
 waiting out an in-flight background solve never stalls producers;
 ``submit``/``observe``/``serve_round`` block only for the churn op
 itself (a 1-lane solve on join, a remap on leave).
+
+Multi-host (``SolverSpec(backend='multihost')``, >1 process): each
+process runs its OWN cluster over its contiguous slice of the global
+cell fleet (``multihost.lane_slice``) — per-host admission queues, per-
+host engines.  ``start()``'s bootstrap is the one global SPMD solve
+(every process reaches it); after that, incremental rounds solve host-
+locally (``MultiCellScheduler.host_local_rounds``) and live churn
+rendezvous at a named fence under the round lock (``_churn_fence``) so
+all processes mutate their cell sets at the same inter-round point.
+The facade API is unchanged — the backend stays opaque, as intended.
 """
 from __future__ import annotations
 
@@ -159,6 +169,24 @@ class SplitInferenceCluster:
         if not self.started:
             raise RuntimeError("cluster not started — call start() first")
 
+    def _churn_fence(self, tag: str) -> None:
+        """Multi-process ``multihost`` churn coordination: every process
+        must mutate its local cell set at the same point between rounds,
+        so live ``add_cell``/``remove_cell`` rendezvous at a named
+        barrier INSIDE the round-lock hold (``controller.paused()``) —
+        process 0's participation is what serialises the global churn
+        order, reusing the same lock that already serialises churn
+        against admission rounds locally.  The tag encodes the op and
+        this process's churn sequence, so divergent churn across
+        processes fails loudly in the barrier instead of desynchronising
+        a later coordinated solve.  No-op single-process and for every
+        other backend (the fence never touches ``jax.distributed``
+        state unless the spec is multihost)."""
+        if self.spec.backend != "multihost":
+            return
+        from repro.distributed import multihost
+        multihost.churn_fence(tag)
+
     # ---- lifecycle -----------------------------------------------------
     def _q_row(self, q0) -> np.ndarray:
         u = self.prof_n_users()
@@ -201,6 +229,7 @@ class SplitInferenceCluster:
         # submit/observe/serve_round would stall behind it.  Producers
         # block only for the churn op itself (a 1-lane solve).
         with self.controller.paused():
+            self._churn_fence(f"add_cell:{cid}")
             with self._lock:
                 lane = self.controller.add_cell(scn, q_row, prof=prof)
                 assert lane == len(self._ids)    # controller appends
@@ -225,6 +254,7 @@ class SplitInferenceCluster:
         # round before taking the facade lock (lane resolved again inside
         # — churn between the check above and here may have moved it)
         with self.controller.paused():
+            self._churn_fence(f"remove_cell:{cell_id}")
             with self._lock:
                 lane = self._lane(cell_id)
                 old_to_new = self.controller.remove_cell(lane)

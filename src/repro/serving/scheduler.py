@@ -192,11 +192,24 @@ class MultiCellScheduler:
                           per_user_split=per_user_split,
                           max_steps=max_steps, lr=lr, tol=tol,
                           gd_chunk=gd_chunk, mesh=mesh)
-        if spec.backend == "sharded" and spec.mesh is None:
+        if spec.backend in ("sharded", "multihost") and spec.mesh is None:
             # resolve the all-devices default ONCE so every schedule()
             # call keys the sharded sweep's jit cache on the same Mesh
             spec = spec.replace(mesh=spec.run_mesh())
         self.spec = spec
+        # multihost across >1 process: partial rounds and churn solves are
+        # per-HOST events (arrivals/drift land on one host's queue), so
+        # they run on a process-local sharded spec with identical GD
+        # statics — per-lane numerics are bitwise the global program's,
+        # and no cross-process rendezvous is needed per round.  Full-mesh
+        # SPMD solves happen only at coordinated moments (bootstrap,
+        # fenced churn) when every process calls schedule() in lockstep.
+        self._host_spec = None
+        if spec.backend == "multihost":
+            from repro.distributed import multihost, solver_mesh
+            if multihost.process_count() > 1:
+                self._host_spec = spec.replace(
+                    backend="sharded", mesh=solver_mesh.cells_mesh())
         self.scns = list(scns)
         # round-invariant solver inputs (stacked scenarios/profiles,
         # warm-start predecessors) are derived once, not per schedule()
@@ -208,6 +221,16 @@ class MultiCellScheduler:
     @property
     def n_cells(self) -> int:
         return len(self.scns)
+
+    @property
+    def host_local_rounds(self) -> bool:
+        """True when incremental (subset) rounds must stay on this
+        process's devices — a multi-process ``multihost`` spec.  The
+        admission loop reads this to route EVERY non-bootstrap round
+        through the bucketed subset path (``admission._step_locked``),
+        since per-host queues can never guarantee the all-process
+        lockstep a global SPMD solve requires."""
+        return self._host_spec is not None
 
     def profile_for(self, cell: int) -> profiles.SplitProfile:
         return self.prof[cell] if isinstance(self.prof, (list, tuple)) \
@@ -439,9 +462,11 @@ class MultiCellScheduler:
         q_sub = q[jnp.asarray(lanes)]
         if init_alloc is None and warm:
             init_alloc = self._warm_init(lanes)
+        # subset rounds run host-local under a multi-process multihost
+        # spec (same GD statics => bitwise-identical per-lane results)
         outs = ligd.solve_batch(None, None, q_sub, self.weights,
-                                spec=self.spec, prep=prep,
-                                init_alloc=init_alloc)
+                                spec=self._host_spec or self.spec,
+                                prep=prep, init_alloc=init_alloc)
         if not self.last_outcomes:
             self.last_outcomes = [None] * self.n_cells
         for j, c in enumerate(cells):              # real lanes only

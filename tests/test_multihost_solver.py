@@ -1,0 +1,308 @@
+"""Multi-host solver mesh suite (``SolverSpec(backend='multihost')``,
+distributed/multihost.py).
+
+Two layers:
+  * single-process tests (no marker — part of plain ``make test``): spec
+    validation rules, mesh identity with the sharded default, the
+    degenerate single-process path being bitwise ``backend='sharded'``,
+    lane-slice math, and the zero-collective-bytes audit;
+  * subprocess tests (``distributed`` + ``slow`` markers — run via
+    ``make test-multihost``): the acceptance equivalence — a 2-process ×
+    2-forced-device multihost solve of B=8 cells must bitwise-match the
+    single-process sharded solve on 4 forced host devices (same lanes,
+    same iterates, same split decisions) — plus the cluster lifecycle
+    across processes (SPMD bootstrap, host-local partial round, fenced
+    add/remove churn).  Workers rendezvous through a gloo coordinator on
+    a free localhost port; each case boots fresh interpreters and
+    compiles full sweeps, so they cost minutes on the 1-core CI lane.
+"""
+import os
+import socket
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ligd, network, profiles
+from repro.core.era import Weights, uniform_alloc
+from repro.distributed import multihost, solver_mesh
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+distributed = [pytest.mark.distributed, pytest.mark.slow]
+
+
+def _setup(n_cells=3, n_users=6, n_subchannels=3):
+    cfg = network.small_config(n_users=n_users,
+                               n_subchannels=n_subchannels)
+    scns = [network.make_scenario(jax.random.PRNGKey(i), cfg)
+            for i in range(n_cells)]
+    prof = profiles.get_profile("nin")
+    return scns, prof, jnp.full((n_cells, n_users), 0.4)
+
+
+# --------------------------------------------- spec validation / plumbing
+def test_multihost_spec_validates():
+    spec = ligd.SolverSpec(backend="multihost")
+    assert spec.gd_chunk == 0                      # while_loop per shard
+    assert ligd.SolverSpec(backend="multihost", gd_chunk=8).gd_chunk == 8
+    assert ligd.SolverSpec(backend="multihost", step_impl="fused",
+                           step_block_m=4).step_block_m == 4
+    # explicit mesh is allowed (like sharded)
+    m = solver_mesh.cells_mesh()
+    assert ligd.SolverSpec(backend="multihost", mesh=m).mesh is m
+
+
+def test_multihost_spec_rejections():
+    with pytest.raises(ValueError, match="lane_placement"):
+        ligd.SolverSpec(backend="multihost", lane_placement="sorted")
+    with pytest.raises(ValueError, match="compiled_sweep"):
+        ligd.SolverSpec(backend="multihost", compiled_sweep=False)
+    with pytest.raises(ValueError, match="CELL axis"):
+        ligd.solve(None, None, None,
+                   spec=ligd.SolverSpec(backend="multihost"))
+    # mesh= stays rejected for the single-device backends
+    with pytest.raises(ValueError, match="mesh="):
+        ligd.SolverSpec(backend="chunked", mesh=solver_mesh.cells_mesh())
+
+
+def test_global_mesh_is_cells_mesh_single_process():
+    """One process: the multihost default mesh IS the sharded default —
+    identical memoised object, so the two backends share one jit cache."""
+    assert multihost.global_cells_mesh() is solver_mesh.cells_mesh()
+    spec = ligd.SolverSpec(backend="multihost")
+    assert spec.run_mesh() is solver_mesh.cells_mesh()
+
+
+def test_lane_slice_and_fence_single_process():
+    assert multihost.lane_slice(4) == (0, 4)
+    multihost.churn_fence("noop")                  # must not block
+    info = multihost.initialize_from_env()         # no env vars: no-op
+    assert info.n_processes == 1 and info.process_id == 0
+
+
+# ------------------------------------------------ single-process numerics
+def test_single_process_multihost_is_bitwise_sharded():
+    scns, prof, q = _setup()
+    mh = ligd.SolverSpec(backend="multihost", max_steps=50,
+                         per_user_split=False)
+    outs_mh = ligd.solve_batch(scns, prof, q, spec=mh)
+    outs_sh = ligd.solve_batch(scns, prof, q,
+                               spec=mh.replace(backend="sharded"))
+    for a, b in zip(outs_mh, outs_sh):
+        assert np.array_equal(a.gamma_by_layer, b.gamma_by_layer)
+        assert np.array_equal(a.iters_by_layer, b.iters_by_layer)
+        assert np.array_equal(a.s, b.s)
+        for la, lb in zip(jax.tree_util.tree_leaves(a.alloc),
+                          jax.tree_util.tree_leaves(b.alloc)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_sweep_collective_cost_is_zero():
+    """The byte audit: the compiled sweep must move 0 bytes through
+    collectives — the body is collective-free and outputs stay on
+    P('cells')."""
+    scns, prof, q = _setup()
+    spec = ligd.SolverSpec(backend="multihost", max_steps=50,
+                           per_user_split=False)
+    prep = ligd.prepare_batch(scns, prof, True)
+    cost = multihost.sweep_collective_cost(
+        spec.run_mesh(), prep.scn_b, q, uniform_alloc(scns[0]),
+        jnp.asarray(prep.pred_b), spec.lr, spec.tol, spec.max_steps,
+        Weights(), prep.prof_b)
+    assert cost.total_coll_bytes == 0.0
+    assert cost.coll_bytes == {}
+
+
+def test_scheduler_pins_multihost_mesh_once():
+    from repro.serving.scheduler import MultiCellScheduler
+    scns, prof, q = _setup()
+    ms = MultiCellScheduler(scns, prof,
+                            spec=ligd.SolverSpec(backend="multihost",
+                                                 max_steps=40,
+                                                 per_user_split=False))
+    assert ms.spec.mesh is solver_mesh.cells_mesh()
+    assert not ms.host_local_rounds                # single process
+    scheds = ms.schedule(np.asarray(q))
+    assert len(scheds) == len(scns)
+
+
+# ------------------------------------------------------- subprocess suite
+def _free_port():
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _env(extra=None):
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    env.update(extra or {})
+    return env
+
+
+def _run_workers(code, n_procs, *, timeout=900, extra_env=None):
+    """N coordinated interpreters running ``code`` (process id/count via
+    REPRO_MH_* env), plus collected (stdout, stderr) per process."""
+    port = _free_port()
+    procs = []
+    for pid in range(n_procs):
+        env = _env({"REPRO_MH_COORDINATOR": f"localhost:{port}",
+                    "REPRO_MH_NUM_PROCESSES": str(n_procs),
+                    "REPRO_MH_PROCESS_ID": str(pid),
+                    **(extra_env or {})})
+        procs.append(subprocess.Popen([sys.executable, "-c", code],
+                                      cwd=_ROOT, env=env,
+                                      stdout=subprocess.PIPE,
+                                      stderr=subprocess.PIPE, text=True))
+    outs = [p.communicate(timeout=timeout) for p in procs]
+    for pid, (p, (out, err)) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, (pid, out[-1000:], err[-3000:])
+    return outs
+
+
+# every process sees 2 forced host devices; 4 local cells each
+_EQUIV_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, numpy as np, jax.numpy as jnp
+from repro.distributed import multihost
+info = multihost.initialize_from_env()
+assert info.n_processes == 2 and info.n_global_devices == 4, info
+from repro.core import ligd, network, profiles
+from repro.core.era import Weights, uniform_alloc
+cfg = network.small_config(n_users=6, n_subchannels=3)
+scns = [network.make_scenario(jax.random.PRNGKey(i), cfg) for i in range(8)]
+pid = info.process_id
+local = scns[4 * pid:4 * pid + 4]            # contiguous per-host slice
+prof = profiles.get_profile("nin")
+q = jnp.full((4, 6), 0.4)
+spec = ligd.SolverSpec(backend="multihost", max_steps=60,
+                       per_user_split=False)
+outs = ligd.solve_batch(local, prof, q, spec=spec)
+assert len(outs) == 4                        # local lanes only
+np.savez(os.environ["MH_OUT"].format(pid=pid),
+         gamma=np.stack([o.gamma_by_layer for o in outs]),
+         iters=np.stack([o.iters_by_layer for o in outs]),
+         s=np.stack([o.s for o in outs]),
+         p=np.stack([np.asarray(o.alloc.p) for o in outs]),
+         beta_up=np.stack([np.asarray(o.alloc.beta_up) for o in outs]),
+         beta_dn=np.stack([np.asarray(o.alloc.beta_dn) for o in outs]))
+# cross-host byte audit of the very program that just ran (every process
+# lowers the same SPMD module)
+prep = ligd.prepare_batch(local, prof, True)
+cost = multihost.sweep_collective_cost(
+    spec.run_mesh(), prep.scn_b, q, uniform_alloc(local[0]),
+    jnp.asarray(prep.pred_b), spec.lr, spec.tol, spec.max_steps,
+    Weights(), prep.prof_b)
+assert cost.total_coll_bytes == 0.0, cost.coll_bytes
+print("EQUIV_WORKER_OK", pid)
+"""
+
+_EQUIV_REF = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import ligd, network, profiles
+from repro.distributed import solver_mesh
+cfg = network.small_config(n_users=6, n_subchannels=3)
+scns = [network.make_scenario(jax.random.PRNGKey(i), cfg) for i in range(8)]
+prof = profiles.get_profile("nin")
+q = jnp.full((8, 6), 0.4)
+spec = ligd.SolverSpec(backend="sharded", mesh=solver_mesh.cells_mesh(4),
+                       max_steps=60, per_user_split=False)
+outs = ligd.solve_batch(scns, prof, q, spec=spec)
+np.savez(os.environ["MH_OUT"].format(pid="ref"),
+         gamma=np.stack([o.gamma_by_layer for o in outs]),
+         iters=np.stack([o.iters_by_layer for o in outs]),
+         s=np.stack([o.s for o in outs]),
+         p=np.stack([np.asarray(o.alloc.p) for o in outs]),
+         beta_up=np.stack([np.asarray(o.alloc.beta_up) for o in outs]),
+         beta_dn=np.stack([np.asarray(o.alloc.beta_dn) for o in outs]))
+print("EQUIV_REF_OK")
+"""
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_multihost_matches_sharded_across_processes(tmp_path):
+    """Acceptance equivalence: 2 processes × 2 devices solving B=8 cells
+    (4 per host) through backend='multihost' must BITWISE match the
+    single-process backend='sharded' solve of the same 8 cells on 4
+    forced host devices — gammas, iteration counts, split decisions, and
+    every discretised allocation leaf, lane for lane."""
+    out_tpl = str(tmp_path / "mh_{pid}.npz")
+    ref_env = _env({"MH_OUT": out_tpl})
+    ref = subprocess.Popen([sys.executable, "-c", _EQUIV_REF], cwd=_ROOT,
+                           env=ref_env, stdout=subprocess.PIPE,
+                           stderr=subprocess.PIPE, text=True)
+    outs = _run_workers(_EQUIV_WORKER, 2, extra_env={"MH_OUT": out_tpl})
+    ref_out, ref_err = ref.communicate(timeout=900)
+    assert "EQUIV_REF_OK" in ref_out, (ref_out[-1000:], ref_err[-3000:])
+    for pid, (out, _err) in enumerate(outs):
+        assert f"EQUIV_WORKER_OK {pid}" in out, out[-1000:]
+
+    r = np.load(out_tpl.format(pid="ref"))
+    for pid in range(2):
+        w = np.load(out_tpl.format(pid=pid))
+        for k in r.files:
+            assert np.array_equal(r[k][4 * pid:4 * pid + 4], w[k]), \
+                (pid, k)
+
+
+_CLUSTER_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, numpy as np
+from repro.distributed import multihost
+info = multihost.initialize_from_env()
+pid = info.process_id
+from repro.core import ligd, network, profiles
+from repro.serving.cluster import SplitInferenceCluster
+cfg = network.small_config(n_users=6, n_subchannels=3)
+prof = profiles.get_profile("nin")
+spec = ligd.SolverSpec(backend="multihost", max_steps=40,
+                       per_user_split=False)
+# each process owns a contiguous slice of the global fleet: 2 cells/host
+lo, hi = multihost.lane_slice(2)
+scns = [network.make_scenario(jax.random.PRNGKey(g), cfg)
+        for g in range(lo, hi)]
+cl = SplitInferenceCluster(None, None, prof, spec=spec)
+ids = [cl.add_cell(s, q0=0.4) for s in scns]
+cl.start(threaded=False)                 # SPMD bootstrap: all processes
+assert cl.scheduler.host_local_rounds
+v0 = cl.schedule_version
+cl.submit(ids[0], user=1, q_s=0.3)
+rnd = cl.step()                          # host-LOCAL partial round: no
+assert rnd is not None and rnd.cells == (0,), rnd    # rendezvous needed
+assert cl.schedule_version > v0
+# coordinated churn: every process joins/leaves at the same fence
+joiner = network.make_scenario(jax.random.PRNGKey(100 + pid), cfg)
+cid = cl.add_cell(joiner, q0=0.4)
+assert cl.n_cells == 3 and cl.lane_of(cid) == 2
+cl.remove_cell(ids[0])
+assert cl.n_cells == 2
+cl.submit(cid, user=0, q_s=0.35)         # post-churn rounds still local
+rnd2 = cl.step()
+assert rnd2 is not None and rnd2.cells == (cl.lane_of(cid),), rnd2
+cl.stop()
+assert not cl.errors
+print("CLUSTER_WORKER_OK", pid)
+"""
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_multihost_cluster_lifecycle_across_processes():
+    """Per-host admission sharding: 2 processes each run a cluster over
+    their contiguous 2-cell slice — one SPMD bootstrap, then host-local
+    partial rounds (no cross-process rendezvous) and fence-coordinated
+    add/remove churn keeping both processes' cell sets in step."""
+    outs = _run_workers(_CLUSTER_WORKER, 2)
+    for pid, (out, _err) in enumerate(outs):
+        assert f"CLUSTER_WORKER_OK {pid}" in out, out[-1000:]

@@ -48,6 +48,40 @@ def test_pad_lanes():
     np.testing.assert_array_equal(idx, [0, 1, 2, 3, 4, 5, 5, 5])
 
 
+def test_cells_mesh_cache_identity():
+    """Repeated mesh resolution must return the IDENTICAL Mesh object —
+    the sharded/multihost sweeps key their jit caches on the mesh, so a
+    fresh (even equal) Mesh per call would recompile every solve.  The
+    all-devices default, the equivalent explicit count, and an
+    over-request (clamped to all devices) all land on one cache slot."""
+    n = len(jax.devices())
+    m = solver_mesh.cells_mesh()
+    assert solver_mesh.cells_mesh() is m
+    assert solver_mesh.cells_mesh(n) is m          # None == explicit count
+    assert solver_mesh.cells_mesh(n + 7) is m      # clamped over-request
+    assert solver_mesh.cells_mesh(1) is solver_mesh.cells_mesh(1)
+    # SolverSpec.run_mesh's lazy default resolves through the same cache
+    spec = ligd.SolverSpec(backend="sharded")
+    assert spec.run_mesh() is m and spec.run_mesh() is m
+
+
+def test_pad_lanes_property_grid():
+    """Over a (B, shards) grid including B < shards: padding exists iff B
+    is indivisible, pads to the NEXT multiple (< shards extra lanes),
+    keeps the real lanes in order, and repeats only the last lane."""
+    for b in range(1, 13):
+        for shards in range(1, 9):
+            idx = solver_mesh.pad_lanes(b, shards)
+            if b % shards == 0:
+                assert idx is None, (b, shards)
+                continue
+            assert len(idx) % shards == 0, (b, shards)
+            assert b < len(idx) < b + shards, (b, shards)
+            np.testing.assert_array_equal(idx[:b], np.arange(b))
+            np.testing.assert_array_equal(idx[b:], np.full(len(idx) - b,
+                                                           b - 1))
+
+
 def test_sharded_solve_matches_unsharded():
     """The shard_map'd sweep must agree with the single-device vmapped
     solve — same iterates per lane, no cross-shard leakage."""
