@@ -21,7 +21,8 @@ PY := PYTHONPATH=src python
 SOLVER_DEVICES := XLA_FLAGS="--xla_force_host_platform_device_count=4"
 
 .PHONY: test test-fast test-serving test-solver test-cluster test-kernels \
-	test-distributed test-multihost bench bench-quick bench-multihost
+	test-telemetry test-distributed test-multihost bench bench-quick \
+	bench-multihost bench-load
 
 test:
 	$(PY) -m pytest -q -m "not distributed"
@@ -44,6 +45,11 @@ test-solver:
 	$(SOLVER_DEVICES) $(PY) -m pytest -q tests/test_ligd_batched.py \
 		tests/test_sharded_solver.py tests/test_era_core.py
 
+# observability stack: telemetry bus + QoS governor + loadgen smoke lane
+# (10^3 fake-clock users; the full harness is `make bench-load`)
+test-telemetry:
+	$(PY) -m pytest -q -m telemetry
+
 # unified cluster API: SolverSpec deprecation shims + cell-churn lifecycle
 test-cluster:
 	$(PY) -m pytest -q -m cluster tests/test_solver_spec.py \
@@ -60,3 +66,9 @@ bench-quick:
 
 bench-multihost:
 	$(PY) -m benchmarks.run --only multihost --json-dir .
+
+# million-user load harness: arrival traces through the full admission/
+# governor stack on a fake clock; lands ./BENCH_load.json incl. the
+# governor on/off flash-crowd A/B and the bus-overhead measurement
+bench-load:
+	$(PY) -m benchmarks.run --only load --json-dir .

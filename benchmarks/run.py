@@ -33,6 +33,7 @@ MODULES = [
     ("online", "benchmarks.online_rescheduling"),
     ("admission", "benchmarks.async_admission"),
     ("cluster", "benchmarks.cluster_churn"),
+    ("load", "benchmarks.load_harness"),
 ]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -65,6 +66,11 @@ def write_json(tag: str, modname: str, records, *, quick: bool,
     config = {
         "quick": quick,
         "jax_version": jax.__version__,
+        # the module's own wall time belongs with the run conditions: a
+        # BENCH diff that shows a derived-metric regression next to a
+        # 10x module_wall_s change is a different machine/load story,
+        # not a code regression
+        "module_wall_s": round(elapsed_s, 3),
     }
     config.update(_platform.describe())
     payload = {

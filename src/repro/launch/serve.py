@@ -15,6 +15,11 @@ background solver thread re-schedules on simulated arrivals and drift):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --tiny \
       --users 12 --cells 2 --async-admission --rounds 6 --arrival-rate 2
 
+Async mode always runs over a ``telemetry.TelemetryBus`` and ends with a
+summary table (rounds, p99 solve ms, QoE attainment).  ``--trace PATH``
+lands every event as JSONL; ``--governor`` attaches the ``QoSGovernor``
+(defer low-drift cells under pressure, prioritise failing QoE).
+
 Cell-churn demo (mid-run join/leave with zero dropped rounds; surviving
 cells' schedule carry-over is asserted):
 
@@ -108,6 +113,13 @@ def main():
                          "half-life); default off")
     ap.add_argument("--qoe-age-cap-s", type=float, default=1.0,
                     help="upper bound on aged thresholds, seconds")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="async mode: write every telemetry event as "
+                         "JSONL to PATH (telemetry.FileSink)")
+    ap.add_argument("--governor", action="store_true",
+                    help="async mode: attach the QoSGovernor — defer "
+                         "low-drift cells under pressure, prioritise "
+                         "failing-QoE cells")
     ap.add_argument("--churn", action="store_true",
                     help="async mode: add a cell a third of the way in and "
                          "remove the first cell two thirds in, asserting "
@@ -155,6 +167,15 @@ def main():
         import time
 
         from repro.serving.cluster import SplitInferenceCluster
+        from repro.serving.governor import QoSGovernor
+        from repro.telemetry import FileSink, TelemetryBus
+
+        bus = TelemetryBus()
+        sink = None
+        if args.trace:
+            sink = FileSink(args.trace)
+            bus.attach(sink)
+        governor = QoSGovernor() if args.governor else None
 
         cells = max(args.cells, 1)
         scns = [network.make_scenario(jax.random.fold_in(key, 100 + b), ncfg)
@@ -164,7 +185,8 @@ def main():
             drift_threshold=args.drift_threshold,
             qoe_half_life_s=args.qoe_half_life_s,
             q_age_cap=args.qoe_age_cap_s,
-            default_q_s=args.qoe_ms / 1e3)
+            default_q_s=args.qoe_ms / 1e3,
+            bus=bus, governor=governor)
         ids = [cluster.add_cell(scn, q) for scn in scns]
         cluster.start(threaded=True)
 
@@ -266,13 +288,42 @@ def main():
         for line in churn_log:
             print(f"churn: {line}")
         # a failed background round would leave cells on stale schedules
-        assert not cluster.errors, cluster.errors
-        solves = len(cluster.rounds)
-        iters = sum(r.total_iters for r in cluster.rounds)
+        assert not cluster.errors, list(cluster.errors)
         print(f"async admission: {served} tokens in {dt:.2f}s "
-              f"({served/dt:.1f} tok/s) | {solves} admission rounds, "
-              f"{iters} solver iters, {rounds_executed}/{args.rounds} "
+              f"({served/dt:.1f} tok/s), {rounds_executed}/{args.rounds} "
               f"serving rounds, final schedule v{cluster.schedule_version}")
+
+        # end-of-run telemetry summary, straight off the bus — the same
+        # aggregates the load harness reports (README "Observability")
+        def row(label, value):
+            print(f"  {label:<26} {value}")
+
+        solve = bus.summary("admission_round", "solve_wall_s")
+        iters = bus.summary("admission_round", "iters")
+        lag = bus.summary("swap_to_serve", "lag_s")
+        att = bus.summary("qoe_attainment", "attainment")
+        print("telemetry summary:")
+        row("admission rounds", bus.count("admission_round"))
+        if solve and solve.count:
+            row("solve wall p50/p99 ms",
+                f"{1e3*solve.p50:.1f} / {1e3*solve.p99:.1f}")
+        if iters and iters.count:
+            row("solver iters (total)", int(round(iters.mean * iters.count)))
+        if lag and lag.count:
+            row("swap-to-serve p99 ms", f"{1e3*lag.p99:.1f}")
+        if att and att.count:
+            row("QoE attainment (mean)", f"{att.mean:.3f}")
+        row("serve rounds", bus.count("serve_round"))
+        row("round errors", bus.count("round_error"))
+        if governor is not None:
+            for fld in ("n_deferred", "n_prioritised", "n_forced"):
+                s = bus.summary("admission_round", fld)
+                n = int(round(s.mean * s.count)) if s and s.count else 0
+                row(f"governor {fld[2:]}", n)
+        if sink is not None:
+            bus.detach(sink)
+            sink.close()
+            print(f"telemetry trace -> {args.trace}")
         return 0
 
     if args.cells > 1:

@@ -1,0 +1,241 @@
+"""Load driver: pushes 10^5–10^6 scripted users through the cluster.
+
+Drives a solver-only ``SplitInferenceCluster`` (no model execution — the
+solver/admission/governor path is what scales with users, the per-token
+model math is benchmarked elsewhere) against a fake clock:
+
+  per simulated round
+    1. the trace scripts arrivals → ``cluster.submit`` per user
+       (posting a fresh QoE deadline), and channel drift →
+       ``cluster.observe`` with the next snapshot of a precomputed
+       Gauss-Markov fading chain;
+    2. one synchronous admission round (``cluster.step``) — where the
+       governor, if attached, sheds load;
+    3. the serving side picks the installed schedules up
+       (``engine.round_snapshot``) after a scripted serve delay, which
+       is what stamps the swap-to-serve lag on the bus.
+
+Everything the report says comes off the telemetry bus: sustained
+rounds/s and users/s (real wall clock), p50/p99 solver wall time (real),
+p99 swap-to-serve lag (fake-clock seconds — deterministic), QoE
+attainment, and the governor's defer/prioritise/force counts.  One
+(trace, seed) pair is one deterministic workload, so a governor on/off
+A/B replays bit-identical arrivals.
+
+Scale notes: a submit is an O(1) validated enqueue (~µs), so the user
+count is bounded by arrival volume, not solves; rounds cost one bucketed
+partial solve each.  10^5 users ≈ 600 rounds at the default shape — see
+``benchmarks/load_harness.py`` for the committed numbers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import network, profiles
+from repro.core.ligd import SolverSpec
+from repro.loadgen.traces import ArrivalTrace
+from repro.serving.cluster import SplitInferenceCluster
+from repro.telemetry import TelemetryBus
+
+
+class SimClock:
+    """The harness's fake clock — every cluster/bus timestamp is
+    simulation time, so lag metrics and governor decisions are
+    deterministic run to run."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@dataclass
+class LoadReport:
+    """One load run, summarised off the bus (all latencies in ms)."""
+    trace: str
+    n_users: int                  # total submit() calls
+    n_cells: int
+    users_per_cell: int
+    rounds: int                   # simulated rounds driven
+    solve_rounds: int             # admission rounds that ran a solve
+    shed_rounds: int              # rounds the governor fully deferred
+    lanes_solved: int             # sum of per-round solved lane counts
+    total_iters: int
+    wall_s: float
+    rounds_per_s: float           # simulated rounds / wall second
+    users_per_s: float            # submits / wall second
+    p50_solve_ms: float
+    p99_solve_ms: float
+    p99_swap_lag_ms: float        # fake-clock swap-to-serve lag
+    qoe_attainment: float         # mean over per-round per-cell samples
+    qoe_attainment_final: float   # mean of each cell's last measurement
+    governor: bool
+    n_deferred: int
+    n_prioritised: int
+    n_forced: int
+    sim_s: float                  # fake-clock span of the run
+    extra: Dict = field(default_factory=dict)
+
+    def as_record(self) -> Dict:
+        d = asdict(self)
+        d.update(d.pop("extra"))
+        return d
+
+
+def _sum_field(bus: TelemetryBus, stream: str, fld: str) -> float:
+    s = bus.summary(stream, fld)
+    return 0.0 if s is None or not s.count else s.mean * s.count
+
+
+def run_load(trace: ArrivalTrace, *,
+             target_users: int = 100_000,
+             n_cells: int = 8,
+             users_per_cell: int = 16,
+             n_subchannels: int = 4,
+             profile: str = "nin",
+             spec: Optional[SolverSpec] = None,
+             governor=None,
+             bus: Optional[TelemetryBus] = None,
+             seed: int = 0,
+             q_base_s: float = 0.35,
+             drift_threshold: float = 0.15,
+             drift_rho: float = 0.85,
+             chain_len: int = 64,
+             round_dt_s: float = 1.0,
+             serve_dt_s: float = 0.05,
+             max_rounds: int = 1_000_000) -> LoadReport:
+    """Run ``trace`` until ``target_users`` arrivals have been pushed.
+
+    ``bus``: pass one to keep it (e.g. with a FileSink attached);
+    default builds a fresh bus on the sim clock.  ``governor``: a
+    ``QoSGovernor`` or None (ungoverned).  ``q_base_s`` is tuned so
+    deadlines (``q_base * U(0.5, 2)``) straddle the solver's achievable
+    latency: attainment lands strictly inside (0, 1), leaving the
+    governor real failing-cell work instead of a degenerate all-pass or
+    all-fail fleet (a below-typical-attainment floor turns EVERY cell
+    "failing" and the governor can never defer; the default is tuned for
+    the default shape over long drift-accumulating runs).  Returns the
+    ``LoadReport``; the bus stays readable afterwards for deeper digs."""
+    clock = SimClock()
+    if bus is None:
+        bus = TelemetryBus(clock=clock, capacity=8192)
+    else:
+        # lag determinism requires every timestamp on the sim clock
+        bus.clock = clock
+    if spec is None:
+        spec = SolverSpec(max_steps=6, per_user_split=False)
+    rng = np.random.default_rng(seed)
+    ncfg = network.small_config(n_users=users_per_cell,
+                                n_subchannels=n_subchannels)
+    prof = profiles.get_profile(profile)
+
+    import jax
+    key = jax.random.PRNGKey(seed)
+    scns = [network.make_scenario(jax.random.fold_in(key, 100 + b), ncfg)
+            for b in range(n_cells)]
+    # precomputed Gauss-Markov fading chains, one per cell: the rounds
+    # walk them forward so observe() sees genuinely continuous drift
+    # without paying an evolve_scenario dispatch inside the timed loop
+    chains: List[List] = []
+    for b, scn in enumerate(scns):
+        chain = [scn]
+        for i in range(chain_len - 1):
+            chain.append(network.evolve_scenario(
+                chain[-1], jax.random.fold_in(key, 10_000 + b * chain_len + i),
+                rho=drift_rho))
+        chains.append(chain)
+
+    cluster = SplitInferenceCluster(
+        None, None, prof, spec=spec, clock=clock, bus=bus,
+        governor=governor, drift_threshold=drift_threshold,
+        default_q_s=q_base_s)
+    ids = [cluster.add_cell(scn) for scn in scns]
+    cluster.start(threaded=False)
+    engine = cluster.engine
+    controller = cluster.controller
+
+    pos = [0] * n_cells
+    users_sent = 0
+    r = 0
+    # flash traces expose their spike window: break solve rounds inside
+    # it out separately — that's the number the governor A/B is judged on
+    windowed = hasattr(trace, "in_spike")
+    spike_rounds = spike_solve_rounds = 0
+    t_wall0 = time.perf_counter()
+    while users_sent < target_users and r < max_rounds:
+        load = trace.load(r, n_cells, rng)
+        clock.advance(round_dt_s)
+        for b, cid in enumerate(ids):
+            for _ in range(int(load.arrivals_per_cell[b])):
+                u = int(rng.integers(users_per_cell))
+                q_s = float(q_base_s * rng.uniform(0.5, 2.0))
+                cluster.submit(cid, u, q_s)
+                users_sent += 1
+        if load.drift_steps:
+            for b, cid in enumerate(ids):
+                pos[b] = (pos[b] + load.drift_steps) % chain_len
+                cluster.observe(cid, chains[b][pos[b]])
+        if load.force_dirty:
+            # adversarial trace: every cell is dirty THIS round whether
+            # or not its drift crossed the threshold (reaches past the
+            # facade on purpose — the queue is the documented seam)
+            for b in range(n_cells):
+                controller.queue.mark_dirty(b)
+        result = cluster.step()
+        if windowed and trace.in_spike(r):
+            spike_rounds += 1
+            spike_solve_rounds += int(result is not None)
+        clock.advance(serve_dt_s)
+        # serving pickup: first snapshot of a fresh version stamps the
+        # swap-to-serve lag on the bus
+        engine.round_snapshot()
+        r += 1
+    wall_s = time.perf_counter() - t_wall0
+    cluster.stop(drain=False)
+
+    solve = bus.summary("admission_round", "solve_wall_s")
+    lag = bus.summary("swap_to_serve", "lag_s")
+    att = bus.summary("qoe_attainment", "attainment")
+    att_final = controller.attainment()
+    n_round_ev = bus.count("admission_round")
+    solve_rounds = solve.count if solve else 0
+    report = LoadReport(
+        trace=trace.name,
+        n_users=users_sent,
+        n_cells=n_cells,
+        users_per_cell=users_per_cell,
+        rounds=r,
+        solve_rounds=solve_rounds,
+        shed_rounds=n_round_ev - solve_rounds,
+        lanes_solved=int(round(_sum_field(bus, "admission_round",
+                                          "n_solved"))),
+        total_iters=int(round(_sum_field(bus, "admission_round", "iters"))),
+        wall_s=wall_s,
+        rounds_per_s=r / wall_s if wall_s > 0 else float("inf"),
+        users_per_s=users_sent / wall_s if wall_s > 0 else float("inf"),
+        p50_solve_ms=1e3 * solve.p50 if solve else float("nan"),
+        p99_solve_ms=1e3 * solve.p99 if solve else float("nan"),
+        p99_swap_lag_ms=1e3 * lag.p99 if lag else float("nan"),
+        qoe_attainment=att.mean if att else float("nan"),
+        qoe_attainment_final=float(np.mean(att_final))
+        if att_final is not None else float("nan"),
+        governor=governor is not None,
+        n_deferred=int(round(_sum_field(bus, "admission_round",
+                                        "n_deferred"))),
+        n_prioritised=int(round(_sum_field(bus, "admission_round",
+                                           "n_prioritised"))),
+        n_forced=int(round(_sum_field(bus, "admission_round", "n_forced"))),
+        sim_s=clock.t,
+    )
+    if windowed:
+        report.extra["spike_rounds"] = spike_rounds
+        report.extra["spike_solve_rounds"] = spike_solve_rounds
+    return report

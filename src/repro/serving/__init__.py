@@ -1,3 +1,4 @@
 from repro.serving import (admission, cluster, engine,  # noqa: F401
-                           scheduler, split_runtime)
+                           governor, scheduler, split_runtime)
 from repro.serving.cluster import CellId, SplitInferenceCluster  # noqa: F401
+from repro.serving.governor import GovernorDecision, QoSGovernor  # noqa: F401

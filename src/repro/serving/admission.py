@@ -66,6 +66,22 @@ solver to burn power/compute on its lane).  Aging applies to what the
 SOLVE sees; the posted values (``current_q``) are preserved and a new
 arrival resets the user's age to zero.
 
+Telemetry (``bus=``, optional): every round phase lands on the
+``TelemetryBus`` — ``admission_round`` (arrival/touched/solved counts,
+solver wall time and iterations, per-phase durations), per-cell
+``qoe_attainment`` (fraction of users whose predicted delay beats their
+effective aged threshold — the paper's QoE target, finally measured),
+``governor`` decisions and ``round_error`` for caught solver-round
+exceptions.  With no bus attached every emit site is a single
+``is not None`` check — the no-telemetry path allocates nothing.
+
+QoS governor (``governor=``, optional): consulted between DRAIN and
+SOLVE.  Cells it defers are NOT solved this round; their queued work is
+carried in a controller-side deferred set and merged into the next
+round's dirty set, so nothing is lost — deferral trades schedule
+freshness on healthy low-drift cells for solver duty-cycle under
+cluster-wide pressure (serving.governor has the policy).
+
 Determinism for tests: the controller takes an injectable ``clock`` (any
 zero-arg callable returning seconds) and ``step()`` can be driven
 synchronously with no thread and no sleeps; the background thread blocks
@@ -76,6 +92,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Set, Tuple
@@ -84,6 +101,23 @@ import numpy as np
 
 from repro.core import network
 from repro.serving.engine import MultiCellServeEngine
+
+# bounded error backlog: always-on runs must never grow this without
+# bound (each caught round failure also lands as a `round_error` event)
+ERROR_BACKLOG = 64
+
+
+def qoe_attainment(sched, q_row) -> float:
+    """Fraction of a cell's users whose predicted delay (from the
+    installed ``Schedule``) beats their effective (aged) QoE threshold —
+    the per-cell serving-quality number the governor and the load
+    harness act on.  Pure numpy, O(U) — cheap enough to run per touched
+    cell per admission round."""
+    lat = np.asarray(sched.pred_latency, np.float64)
+    q = np.asarray(q_row, np.float64)
+    if lat.size == 0:
+        return 1.0
+    return float(np.mean(lat <= q))
 
 
 def age_thresholds(q_posted: np.ndarray, t_posted: np.ndarray, now: float,
@@ -223,13 +257,27 @@ class AdmissionController:
                  min_interval_s: float = 0.0,
                  partial_batch: bool = True,
                  qoe_half_life_s: Optional[float] = None,
-                 q_age_cap: Optional[float] = None):
+                 q_age_cap: Optional[float] = None,
+                 bus=None, governor=None):
         self.engine = engine
         self.scheduler = engine.scheduler
         self.queue = AdmissionQueue()
         self.drift_threshold = float(drift_threshold)
         self.clock = clock
         self.warm_start = warm_start
+        # telemetry bus (telemetry.TelemetryBus) — None keeps every emit
+        # site a single attribute check, nothing allocated
+        self.bus = bus
+        # QoS governor (serving.governor.QoSGovernor) — None is the
+        # ungoverned policy: every touched cell solves every round
+        self.governor = governor
+        # cells the governor deferred: merged into the next round's dirty
+        # set at drain (their arrivals' q updates were already applied).
+        # Mutated only under _round_lock (rounds and churn both hold it).
+        self._deferred: Set[int] = set()
+        # last measured per-cell QoE attainment (NaN: not yet measured);
+        # follows churn remaps like every other per-lane array
+        self._attainment: Optional[np.ndarray] = None
         # partial rounds: solve only touched cells on the bucket ladder
         # (scheduler.schedule(cells=...)); False = always solve all B
         self.partial_batch = bool(partial_batch)
@@ -243,7 +291,10 @@ class AdmissionController:
         # of serving (threaded mode only; assumes a real-time clock there)
         self.min_interval_s = float(min_interval_s)
         self.rounds: List[AdmissionRound] = []
-        self.errors: List[BaseException] = []  # failed threaded rounds
+        # failed threaded rounds — BOUNDED: an always-on run that keeps
+        # failing must not leak memory (each failure also emits a
+        # `round_error` event, so losing old entries loses no signal)
+        self.errors: deque = deque(maxlen=ERROR_BACKLOG)
         self.round_done = threading.Event()   # pulses after each round
         # live channel state and the reference snapshot each cell's active
         # schedule was solved on (drift is measured live vs reference)
@@ -278,10 +329,24 @@ class AdmissionController:
         with self._state_lock:
             self._q = q0.copy()
             self._t_posted = np.full_like(q0, self.clock(), np.float64)
+            t0 = time.perf_counter()
             scheds = self.scheduler.schedule(self._q)
+            solve_s = time.perf_counter() - t0
             version = self.engine.install_schedules(scheds)
             self._ref = list(self._live)
-            return version
+            self._attainment = np.array(
+                [qoe_attainment(s, q0[b]) for b, s in enumerate(scheds)],
+                np.float64)
+        bus = self.bus
+        if bus is not None:
+            bus.emit("bootstrap", version=version, n_cells=len(scheds),
+                     solve_wall_s=solve_s,
+                     iters=sum(s.iters for s in scheds))
+            for b, s in enumerate(scheds):
+                bus.emit("qoe_attainment", cell=b,
+                         attainment=float(self._attainment[b]),
+                         version=version)
+        return version
 
     # ---- producers (serving side) -------------------------------------
     def submit(self, cell: int, user: int, q_s: float) -> Arrival:
@@ -353,10 +418,19 @@ class AdmissionController:
             return self._step_locked()
 
     def _step_locked(self) -> Optional[AdmissionRound]:
+        t_wall0 = time.perf_counter()
         arrivals, dirty = self.queue.drain()
+        # governor-deferred cells from previous rounds rejoin here: their
+        # arrivals' threshold updates were applied at their own drain, so
+        # a dirty mark is all the carried work they need
+        if self._deferred:
+            dirty |= self._deferred
+            self._deferred.clear()
         if not arrivals and not dirty:
             return None
         t_start = self.clock()
+        bus = self.bus
+        decision = None
         with self._state_lock:
             # bootstrap publishes _q under this lock; checking it out here
             # (as this method once did) races a concurrent bootstrap into
@@ -370,18 +444,58 @@ class AdmissionController:
             touched = sorted(dirty | {a.cell for a in arrivals})
             drift = {b: network.scenario_drift(self._live[b], self._ref[b])
                      for b in sorted(dirty)}
+            if self.governor is not None:
+                # the governor ranks by drift across the WHOLE touched
+                # set — arrival-only cells measure theirs here (skipped
+                # ungoverned: the round would not use it)
+                drift_all = dict(drift)
+                for b in touched:
+                    if b not in drift_all:
+                        drift_all[b] = network.scenario_drift(
+                            self._live[b], self._ref[b])
+                decision = self.governor.review(
+                    touched, drift_all, self._attainment, self.n_cells)
             # snapshot the scenarios this round actually solves: _live may
             # move again while the solve runs, and the drift reference must
             # be the state the installed schedule was solved ON
             solved = list(self._live)
-            # multi-process multihost schedulers route EVERY incremental
-            # round through the bucketed subset path (host-local solves):
-            # a full-mesh SPMD solve needs all processes in lockstep,
-            # which this host's arrival/drift queue cannot arrange
-            partial = self.partial_batch and (
-                len(touched) < self.n_cells
-                or getattr(self.scheduler, "host_local_rounds", False))
             q = self._effective_q_locked(t_start)
+
+        if decision is not None:
+            self._deferred.update(decision.deferred)
+            if bus is not None:
+                for c in decision.deferred:
+                    bus.emit("governor", decision="deferred", cell=c,
+                             drift=float(drift_all.get(c, 0.0)),
+                             defer_count=self.governor.defer_count(c))
+                for c in decision.prioritised:
+                    bus.emit("governor", decision="prioritised", cell=c,
+                             attainment=float(self._attainment[c]))
+                for c in decision.forced:
+                    bus.emit("governor", decision="forced", cell=c)
+            if not decision.solve:
+                # fully shed round: nothing solves, nothing swaps; the
+                # deferred set re-arms the next round trigger
+                if bus is not None:
+                    # no solve_wall_s field on a shed round: the p99
+                    # solve-latency aggregate must summarise real solves,
+                    # not governor-shed zeros
+                    bus.emit("admission_round", version=-1,
+                             n_arrivals=len(arrivals),
+                             n_touched=len(touched), n_solved=0,
+                             n_deferred=len(decision.deferred),
+                             n_prioritised=0, n_forced=0, iters=0,
+                             round_wall_s=time.perf_counter() - t_wall0)
+                return None
+            touched = sorted(decision.solve)
+
+        # multi-process multihost schedulers route EVERY incremental
+        # round through the bucketed subset path (host-local solves):
+        # a full-mesh SPMD solve needs all processes in lockstep,
+        # which this host's arrival/drift queue cannot arrange
+        partial = self.partial_batch and (
+            len(touched) < self.n_cells
+            or getattr(self.scheduler, "host_local_rounds", False))
 
         # outside the lock: scheduler state belongs to this (single-
         # consumer) round, and the scatter/restack dispatches must not
@@ -391,6 +505,7 @@ class AdmissionController:
         self.scheduler.update_scenarios(
             solved, cells=touched if partial else None)
 
+        t_solve0 = time.perf_counter()
         if partial:
             subset = self.scheduler.schedule(q, warm=self.warm_start,
                                              cells=touched)
@@ -400,6 +515,7 @@ class AdmissionController:
             scheds = self.scheduler.schedule(q, warm=self.warm_start)
             per_cell = {b: scheds[b] for b in touched}
             iters = sum(s.iters for s in scheds)      # all B lanes solved
+        solve_s = time.perf_counter() - t_solve0
         version = self.engine.swap_schedules(per_cell)
 
         rnd = AdmissionRound(
@@ -409,11 +525,30 @@ class AdmissionController:
         with self._state_lock:
             for b in touched:
                 self._ref[b] = solved[b]
+                self._attainment[b] = qoe_attainment(per_cell[b], q[b])
             # _last_round_t is read lock-free-ish by the solver thread's
             # batching window (_batching_wait_s snapshots it under this
             # lock) — publish it under the same lock as every other writer
             self._last_round_t = rnd.t_installed
         self.rounds.append(rnd)
+        if bus is not None:
+            bus.emit("admission_round", version=version,
+                     n_arrivals=len(arrivals),
+                     n_touched=len(touched) if decision is None
+                     else len(touched) + len(decision.deferred),
+                     n_solved=len(touched),
+                     n_deferred=0 if decision is None
+                     else len(decision.deferred),
+                     n_prioritised=0 if decision is None
+                     else len(decision.prioritised),
+                     n_forced=0 if decision is None
+                     else len(decision.forced),
+                     iters=iters, solve_wall_s=solve_s,
+                     round_wall_s=time.perf_counter() - t_wall0)
+            for b in touched:
+                bus.emit("qoe_attainment", cell=b,
+                         attainment=float(self._attainment[b]),
+                         version=version)
         self.round_done.set()
         return rnd
 
@@ -476,15 +611,20 @@ class AdmissionController:
             # bucket='exact': a join solves exactly its one lane even
             # under the 'full' admission policy (whose B-wide padding
             # would replicate the joiner B times for nothing)
+            t_solve0 = time.perf_counter()
             sched = self.scheduler.schedule(q, warm=self.warm_start,
                                             cells=[lane],
                                             bucket="exact")[0]
+            solve_s = time.perf_counter() - t_solve0
             # publish under the state lock: producers running concurrently
             # with the solve above see a consistent (state, engine) pair
             with self._state_lock:
                 version = self.engine.resize(list(self._live),
                                              schedules={lane: sched},
                                              keep=keep)
+                if self._attainment is not None:
+                    self._attainment = np.append(
+                        self._attainment, qoe_attainment(sched, q[lane]))
             rnd = AdmissionRound(
                 version=version, cells=(lane,), n_arrivals=0, drift={},
                 total_iters=sched.iters, t_start=now,
@@ -492,6 +632,13 @@ class AdmissionController:
             with self._state_lock:
                 self._last_round_t = rnd.t_installed
             self.rounds.append(rnd)
+            if self.bus is not None:
+                self.bus.emit("cell_join", lane=lane, version=version,
+                              iters=sched.iters, solve_wall_s=solve_s)
+                if self._attainment is not None:
+                    self.bus.emit("qoe_attainment", cell=lane,
+                                  attainment=float(self._attainment[lane]),
+                                  version=version)
             self.round_done.set()
             return lane
 
@@ -534,15 +681,27 @@ class AdmissionController:
                 self._t_posted = self._t_posted[survivors]
                 self._live = [self._live[i] for i in survivors]
                 self._ref = [self._ref[i] for i in survivors]
+                if self._attainment is not None:
+                    self._attainment = self._attainment[survivors]
                 self.queue.remap(old_to_new)
                 version = self.engine.resize(list(self._live), schedules={},
                                              keep=keep)
+            # per-lane governor/deferral state follows the same remap as
+            # every other lane-indexed structure (under _round_lock, like
+            # all its other mutators)
+            self._deferred = {old_to_new[c] for c in self._deferred
+                              if c in old_to_new}
+            if self.governor is not None:
+                self.governor.remap(old_to_new)
             rnd = AdmissionRound(
                 version=version, cells=(), n_arrivals=0, drift={},
                 total_iters=0, t_start=now, t_installed=self.clock())
             with self._state_lock:
                 self._last_round_t = rnd.t_installed
             self.rounds.append(rnd)
+            if self.bus is not None:
+                self.bus.emit("cell_leave", lane=lane, version=version,
+                              n_cells=len(survivors))
             self.round_done.set()
             return old_to_new
 
@@ -590,10 +749,15 @@ class AdmissionController:
                 self.step()
             except Exception as exc:   # noqa: BLE001 — loop must survive
                 # a failed round must not kill the loop: serving would
-                # silently run on stale schedules forever.  Record it and
+                # silently run on stale schedules forever.  Record it
+                # (bounded backlog + a round_error event, so failures are
+                # LOUD on the bus instead of silent until polled) and
                 # keep consuming (the queue was already drained, so the
                 # failing work does not wedge the loop).
                 self.errors.append(exc)
+                if self.bus is not None:
+                    self.bus.emit("round_error", kind=type(exc).__name__,
+                                  error=repr(exc))
                 self.round_done.set()
 
     def stop(self, drain: bool = True) -> None:
@@ -633,3 +797,11 @@ class AdmissionController:
     def reference_scenario(self, cell: int):
         with self._state_lock:
             return self._ref[cell]
+
+    def attainment(self) -> Optional[np.ndarray]:
+        """Last measured per-cell QoE attainment (None pre-bootstrap).
+        Updated for the cells each round touches; untouched cells keep
+        the value from the round that last solved them."""
+        with self._state_lock:
+            return None if self._attainment is None \
+                else self._attainment.copy()

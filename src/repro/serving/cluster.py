@@ -96,7 +96,8 @@ class SplitInferenceCluster:
                  qoe_half_life_s: Optional[float] = None,
                  q_age_cap: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 default_q_s: float = 0.4):
+                 default_q_s: float = 0.4,
+                 bus=None, governor=None):
         self.params = params
         self.model_cfg = model_cfg
         self.prof = prof
@@ -108,6 +109,14 @@ class SplitInferenceCluster:
         self.q_age_cap = q_age_cap
         self.clock = clock
         self.default_q_s = float(default_q_s)
+        # observability + governance (both optional): the telemetry bus
+        # (telemetry.TelemetryBus) is threaded through the engine and
+        # admission controller at start(); the QoS governor
+        # (serving.governor.QoSGovernor) is consulted by every admission
+        # round.  None = no events, ungoverned policy — bitwise the
+        # pre-telemetry serving behaviour.
+        self.bus = bus
+        self.governor = governor
 
         # id->lane remap table; _ids is its inverse (lane -> id)
         self._lane_of: Dict[CellId, int] = {}
@@ -153,9 +162,11 @@ class SplitInferenceCluster:
         return self.controller.rounds
 
     @property
-    def errors(self) -> List[BaseException]:
-        """Exceptions from failed background admission rounds — non-empty
-        means some cells may be serving on stale schedules."""
+    def errors(self):
+        """Bounded deque of exceptions from failed background admission
+        rounds (newest last; admission.ERROR_BACKLOG entries retained,
+        each failure also emitted as a ``round_error`` bus event) —
+        non-empty means some cells may be serving on stale schedules."""
         self._require_started()
         return self.controller.errors
 
@@ -279,7 +290,8 @@ class SplitInferenceCluster:
             self.scheduler = MultiCellScheduler(
                 list(scns), self.prof, self.weights, spec=self.spec)
             self.engine = MultiCellServeEngine(
-                self.params, self.model_cfg, list(scns), self.scheduler)
+                self.params, self.model_cfg, list(scns), self.scheduler,
+                bus=self.bus, clock=self.clock)
             self.controller = AdmissionController(
                 self.engine,
                 drift_threshold=self.drift_threshold,
@@ -288,7 +300,8 @@ class SplitInferenceCluster:
                 min_interval_s=self.min_interval_s,
                 partial_batch=self.spec.bucket != "full",
                 qoe_half_life_s=self.qoe_half_life_s,
-                q_age_cap=self.q_age_cap)
+                q_age_cap=self.q_age_cap,
+                bus=self.bus, governor=self.governor)
             self._ids = list(ids)
             self._lane_of = {cid: lane for lane, cid in enumerate(ids)}
             self._staged = []
@@ -366,6 +379,10 @@ class SplitInferenceCluster:
                                  f"got {len(tokens)}")
         rounds = self.engine.serve_snapshot(ss, scns, profs, tokens,
                                             decode_steps=decode_steps)
+        if self.bus is not None:
+            self.bus.emit("serve_round", version=ss.version,
+                          n_cells=len(ids),
+                          n_users=sum(len(r) for r in rounds))
         return {cid: res for cid, res in zip(ids, rounds)}
 
     # ---- per-cell state, keyed by CellId (tests / observability) -------
@@ -380,6 +397,15 @@ class SplitInferenceCluster:
         self._require_started()
         with self._lock:
             return self.controller.effective_q()[self._lane(cell_id)]
+
+    def qoe_attainment(self, cell_id: CellId) -> float:
+        """The cell's last measured QoE attainment: fraction of its users
+        whose predicted delay beat their effective aged threshold at the
+        round that last solved it (admission.qoe_attainment)."""
+        self._require_started()
+        with self._lock:
+            att = self.controller.attainment()
+            return float(att[self._lane(cell_id)])
 
     def drift_reference(self, cell_id: CellId):
         """The scenario snapshot the cell's active schedule was solved on

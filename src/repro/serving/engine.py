@@ -19,6 +19,7 @@ then reuses the same per-cell execution path (``execute_schedule``).
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -150,11 +151,21 @@ class MultiCellServeEngine:
                                    in-flight rounds keep the snapshot they
                                    grabbed at round start."""
 
-    def __init__(self, params, cfg, scns, scheduler: MultiCellScheduler):
+    def __init__(self, params, cfg, scns, scheduler: MultiCellScheduler,
+                 *, bus=None, clock=time.monotonic):
         self.params = params
         self.cfg = cfg
         self.scns = list(scns)
         self.scheduler = scheduler          # profiles come from here too
+        # telemetry (optional): every install/swap/resize records its
+        # version's install time; the FIRST serving round to snapshot
+        # that version emits `swap_to_serve` with the elapsed lag — the
+        # freshness gap between solver output and serving pickup.  The
+        # clock is injectable so the load harness measures lag in
+        # deterministic fake-clock time.
+        self.bus = bus
+        self.clock = clock
+        self._pending_serve: Dict[int, float] = {}   # version -> install t
         self._lock = threading.Lock()
         self._installed: Optional[ScheduleSet] = None
 
@@ -172,7 +183,11 @@ class MultiCellServeEngine:
         with self._lock:
             version = (self._installed.version + 1) if self._installed else 1
             self._installed = ScheduleSet(version, scheds)
-            return version
+            self._pending_serve[version] = self.clock()
+        if self.bus is not None:
+            self.bus.emit("schedule_swap", version=version,
+                          n_swapped=len(scheds), kind="install")
+        return version
 
     def swap_schedules(self, per_cell: Dict[int, Schedule]) -> int:
         """Atomically swap a subset of cells' schedules (admission rounds
@@ -189,7 +204,11 @@ class MultiCellServeEngine:
                 scheds[b] = sched
             version = self._installed.version + 1
             self._installed = ScheduleSet(version, tuple(scheds))
-            return version
+            self._pending_serve[version] = self.clock()
+        if self.bus is not None:
+            self.bus.emit("schedule_swap", version=version,
+                          n_swapped=len(per_cell), kind="swap")
+        return version
 
     def resize(self, scns, schedules=None, keep: Dict[int, int] = None
                ) -> int:
@@ -250,7 +269,11 @@ class MultiCellServeEngine:
             version = (cur.version + 1) if cur else 1
             self.scns = scns
             self._installed = ScheduleSet(version, tuple(scheds))
-            return version
+            self._pending_serve[version] = self.clock()
+        if self.bus is not None:
+            self.bus.emit("schedule_swap", version=version,
+                          n_swapped=len(scheds), kind="resize")
+        return version
 
     def current_schedules(self) -> Optional[ScheduleSet]:
         """Consistent snapshot (single reference read under the lock)."""
@@ -266,8 +289,23 @@ class MultiCellServeEngine:
         a lane onto the wrong cell's profile nor index past the end.  The
         cluster facade calls this under its own lock (which churn also
         holds), making the whole triple churn-consistent."""
+        lag = None
         with self._lock:
             ss, scns = self._installed, list(self.scns)
+            if ss is not None and self._pending_serve:
+                t_inst = self._pending_serve.pop(ss.version, None)
+                if t_inst is not None:
+                    lag = self.clock() - t_inst
+                # versions superseded before ever serving have no
+                # first-serve moment — drop them so the table stays
+                # bounded by the number of in-flight versions
+                for v in [v for v in self._pending_serve
+                          if v < ss.version]:
+                    del self._pending_serve[v]
+        if lag is not None and self.bus is not None:
+            # swap-to-serve lag: this is the FIRST round to serve this
+            # schedule version since its install
+            self.bus.emit("swap_to_serve", version=ss.version, lag_s=lag)
         profs = [self.scheduler.profile_for(b) for b in range(len(scns))]
         return ss, scns, profs
 

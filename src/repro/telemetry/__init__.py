@@ -1,0 +1,3 @@
+from repro.telemetry.bus import (Event, StreamSummary,  # noqa: F401
+                                 TelemetryBus)
+from repro.telemetry.sinks import FileSink  # noqa: F401

@@ -1,0 +1,117 @@
+"""Load-generator smoke lane: traces + driver at 10^3 users on the fake
+clock — the tier-1 guard for the >=10^5-user harness in
+benchmarks/load_harness.py.  Everything here is deterministic: arrivals
+replay bit-identically per (trace, seed), swap-to-serve lag advances on
+the SimClock, and the governor A/B mechanics are asserted at small
+scale."""
+import numpy as np
+import pytest
+
+from repro.loadgen import (AdversarialTrace, DiurnalTrace, FlashCrowdTrace,
+                           PoissonTrace, make_trace, run_load)
+from repro.serving import QoSGovernor
+
+pytestmark = pytest.mark.telemetry
+
+
+# ---------------------------------------------------------------- traces
+def test_registry_builds_each_shape():
+    assert isinstance(make_trace("poisson"), PoissonTrace)
+    assert isinstance(make_trace("diurnal"), DiurnalTrace)
+    assert isinstance(make_trace("flash", spike_mult=10.0), FlashCrowdTrace)
+    assert isinstance(make_trace("adversarial"), AdversarialTrace)
+    with pytest.raises(ValueError, match="unknown trace"):
+        make_trace("tsunami")
+
+
+def test_diurnal_rate_curve():
+    tr = DiurnalTrace(base_rate=5.0, peak_rate=40.0, period_rounds=200)
+    assert tr.rate(0) == pytest.approx(5.0)          # trough
+    assert tr.rate(100) == pytest.approx(40.0)       # peak at half period
+    assert tr.rate(200) == pytest.approx(5.0)        # periodic
+    assert 5.0 < tr.rate(50) < 40.0
+
+
+def test_flash_window_and_multiplier():
+    tr = FlashCrowdTrace(base_rate=8.0, spike_mult=8.0,
+                         spike_start=10, spike_rounds=5)
+    assert not tr.in_spike(9) and tr.in_spike(10)
+    assert tr.in_spike(14) and not tr.in_spike(15)
+    assert tr.rate(9) == pytest.approx(8.0)
+    assert tr.rate(12) == pytest.approx(64.0)
+
+
+def test_adversarial_forces_every_cell_dirty():
+    tr = AdversarialTrace()
+    rng = np.random.default_rng(0)
+    load = tr.load(0, 4, rng)
+    assert load.force_dirty and load.drift_steps == 3
+    assert load.arrivals_per_cell.shape == (4,)
+
+
+def test_trace_sampling_deterministic_per_seed():
+    tr = PoissonTrace(rate_per_cell=20.0)
+    a = tr.load(3, 8, np.random.default_rng(7)).arrivals_per_cell
+    b = tr.load(3, 8, np.random.default_rng(7)).arrivals_per_cell
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------- driver
+SMOKE = dict(target_users=1_000, n_cells=4, users_per_cell=8,
+             n_subchannels=4, seed=0)
+
+
+def test_smoke_run_reports_the_headline_metrics():
+    rep = run_load(make_trace("poisson"), **SMOKE)
+    assert rep.n_users >= 1_000
+    assert rep.rounds > 0 and rep.solve_rounds > 0
+    assert rep.shed_rounds == 0                      # ungoverned
+    assert rep.p99_solve_ms > 0
+    assert 0.0 <= rep.qoe_attainment <= 1.0
+    assert 0.0 <= rep.qoe_attainment_final <= 1.0
+    # swap-to-serve lag is fake-clock: exactly the scripted serve delay
+    assert rep.p99_swap_lag_ms == pytest.approx(50.0)
+    assert rep.sim_s == pytest.approx(rep.rounds * 1.05)
+    rec = rep.as_record()
+    for k in ("trace", "n_users", "solve_rounds", "p99_solve_ms",
+              "p99_swap_lag_ms", "qoe_attainment", "governor"):
+        assert k in rec
+
+
+def test_fake_clock_metrics_replay_identically():
+    a = run_load(make_trace("diurnal", period_rounds=20), **SMOKE)
+    b = run_load(make_trace("diurnal", period_rounds=20), **SMOKE)
+    # everything not measured on the real wall clock is bit-identical
+    assert a.n_users == b.n_users and a.rounds == b.rounds
+    assert a.solve_rounds == b.solve_rounds
+    assert a.lanes_solved == b.lanes_solved
+    assert a.total_iters == b.total_iters
+    assert a.p99_swap_lag_ms == b.p99_swap_lag_ms
+    assert a.qoe_attainment == b.qoe_attainment
+    assert a.qoe_attainment_final == b.qoe_attainment_final
+
+
+def test_governor_ab_sheds_flash_crowd_load():
+    tr = make_trace("flash", spike_start=5, spike_rounds=20,
+                    base_rate=4.0, spike_mult=8.0)
+    off = run_load(tr, **SMOKE)
+    on = run_load(tr, **SMOKE, governor=QoSGovernor())
+    # the A/B replays identical arrivals...
+    assert on.n_users == off.n_users and on.rounds == off.rounds
+    # ...and the governor strictly sheds spike-window solver rounds
+    assert on.extra["spike_solve_rounds"] < off.extra["spike_solve_rounds"]
+    assert off.extra["spike_solve_rounds"] == off.extra["spike_rounds"]
+    assert on.n_deferred > 0
+    assert off.n_deferred == 0 and off.shed_rounds == 0
+    # while QoE attainment holds (acceptance band: within 2%)
+    assert on.qoe_attainment >= off.qoe_attainment - 0.02
+
+
+def test_adversarial_trace_cannot_be_fully_shed():
+    rep = run_load(make_trace("adversarial"), **SMOKE,
+                   governor=QoSGovernor())
+    # every cell dirty every round: the governor caps and rotates, but
+    # each round still solves someone (deferral is never a full shed
+    # once drift marks are hard)
+    assert rep.solve_rounds + rep.shed_rounds == rep.rounds
+    assert rep.solve_rounds > 0 and rep.n_forced > 0
