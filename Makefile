@@ -39,7 +39,8 @@ test-multihost:
 	$(PY) -m pytest -q tests/test_multihost_solver.py
 
 test-serving:
-	$(PY) -m pytest -q tests/test_serving.py tests/test_admission.py
+	$(PY) -m pytest -q tests/test_serving.py tests/test_admission.py \
+		tests/test_handover.py
 
 test-solver:
 	$(SOLVER_DEVICES) $(PY) -m pytest -q tests/test_ligd_batched.py \

@@ -2,4 +2,4 @@ from repro.loadgen.driver import LoadReport, run_load  # noqa: F401
 from repro.loadgen.traces import (AdversarialTrace,  # noqa: F401
                                   ArrivalTrace, DiurnalTrace,
                                   FlashCrowdTrace, PoissonTrace,
-                                  make_trace)
+                                  RandomWaypointTrace, make_trace)

@@ -135,11 +135,62 @@ class AdversarialTrace(ArrivalTrace):
         return True
 
 
+@dataclass(frozen=True)
+class RandomWaypointTrace(FlashCrowdTrace):
+    """Mobility on top of a flash crowd: users hop between grid-adjacent
+    cells (random-waypoint over a ``cols``-wide cell grid) while the
+    arrival spike drives the governor into deferral — handover lands
+    exactly where churn is most expensive.  ``moves(r, ...)`` is the
+    per-round user→cell movement matrix, sampled with the DRIVER's rng
+    like arrivals, so one (trace, seed) pair replays bit-identical
+    mobility for the move vs leave+rejoin A/B.
+
+    ``move_rate``: mean handovers per round across the whole fleet;
+    multiplied by ``spike_move_mult`` inside the flash window (a crowd
+    that surges also moves)."""
+    move_rate: float = 2.0
+    spike_move_mult: float = 2.0
+    grid_cols: int = 0              # 0: auto — ~square grid
+    name: str = "mobility"
+
+    def neighbours(self, cell: int, n_cells: int) -> list:
+        """Grid 4-neighbourhood of ``cell`` (row-major, ``cols`` wide)."""
+        cols = self.grid_cols or max(math.isqrt(max(n_cells, 1)), 1)
+        row, col = divmod(cell, cols)
+        out = []
+        for dr, dc in ((-1, 0), (1, 0), (0, -1), (0, 1)):
+            nr, nc = row + dr, col + dc
+            dst = nr * cols + nc
+            if nr >= 0 and 0 <= nc < cols and 0 <= dst < n_cells:
+                out.append(dst)
+        return out
+
+    def moves(self, r: int, n_cells: int, n_users: int,
+              rng: np.random.Generator) -> list:
+        """Sample this round's handovers: a list of (src_cell, dst_cell,
+        user) hops to grid-adjacent cells.  Duck-typed by the driver —
+        any trace growing a ``moves`` method becomes a mobility trace."""
+        if n_cells < 2:
+            return []
+        mean = self.move_rate * (self.spike_move_mult if self.in_spike(r)
+                                 else 1.0)
+        hops = []
+        for _ in range(int(rng.poisson(mean))):
+            src = int(rng.integers(n_cells))
+            nbrs = self.neighbours(src, n_cells)
+            if not nbrs:
+                continue
+            dst = int(nbrs[rng.integers(len(nbrs))])
+            hops.append((src, dst, int(rng.integers(n_users))))
+        return hops
+
+
 _TRACES = {
     "poisson": PoissonTrace,
     "diurnal": DiurnalTrace,
     "flash": FlashCrowdTrace,
     "adversarial": AdversarialTrace,
+    "mobility": RandomWaypointTrace,
 }
 
 

@@ -106,6 +106,10 @@ from repro.serving.engine import MultiCellServeEngine
 # bound (each caught round failure also lands as a `round_error` event)
 ERROR_BACKLOG = 64
 
+# sentinel distinguishing "slot not in the per-user map" from "mapped to
+# None" (= drop) in AdmissionQueue.remap
+_UNMAPPED = object()
+
 
 def qoe_attainment(sched, q_row) -> float:
     """Fraction of a cell's users whose predicted delay (from the
@@ -182,15 +186,37 @@ class AdmissionQueue:
             dirty, self._dirty = self._dirty, set()
             return arrivals, dirty
 
-    def remap(self, old_to_new: Dict[int, int]) -> None:
-        """Rewrite queued work after a cell-lane remap (churn): arrivals
+    def remap(self, old_to_new: Dict[int, int],
+              users: Dict[Tuple[int, int],
+                          Optional[Tuple[int, int]]] = None) -> None:
+        """Rewrite queued work after a membership change (churn): arrivals
         and dirty marks for surviving cells move to their new lanes, work
-        for removed cells (absent from the map) is dropped.  Atomic under
-        the queue lock, so producers never see a half-remapped queue."""
+        for removed cells (absent from the map) is dropped.
+
+        ``users`` refines the map to per-(cell, user) granularity — the
+        handover path needs it, because a cell-level map can only move or
+        drop WHOLE cells and would misdeliver a moved user's queued
+        arrivals to whichever user inherits its old slot.  Keys are
+        (old_cell, old_user) slots; an arrival matching one is rewritten
+        to the mapped (new_cell, new_user) slot directly (post-remap
+        coordinates, NOT run through ``old_to_new`` again), or dropped
+        when the mapped value is None (the user departed the fleet).
+        Non-matching arrivals follow the cell-level map as before; dirty
+        marks stay cell-granular.  Atomic under the queue lock, so
+        producers never see a half-remapped queue."""
+        users = users or {}
         with self._cond:
-            self._arrivals = [
-                dataclasses.replace(a, cell=old_to_new[a.cell])
-                for a in self._arrivals if a.cell in old_to_new]
+            arrivals = []
+            for a in self._arrivals:
+                slot = users.get((a.cell, a.user), _UNMAPPED)
+                if slot is _UNMAPPED:
+                    if a.cell in old_to_new:
+                        arrivals.append(dataclasses.replace(
+                            a, cell=old_to_new[a.cell]))
+                elif slot is not None:
+                    arrivals.append(dataclasses.replace(
+                        a, cell=slot[0], user=slot[1]))
+            self._arrivals = arrivals
             self._dirty = {old_to_new[c] for c in self._dirty
                            if c in old_to_new}
 
@@ -705,6 +731,112 @@ class AdmissionController:
             self.round_done.set()
             return old_to_new
 
+    def move_user(self, src_lane: int, dst_lane: int, user: int,
+                  dst_user: Optional[int] = None) -> AdmissionRound:
+        """Hand one user over from ``src_lane`` to ``dst_lane``: the
+        user's per-(lane, user) admission state — posted QoE threshold,
+        its ``_t_posted`` age, and any queued ``Arrival``s — transfers to
+        slot ``dst_user`` (default: same user index) of the destination,
+        then ONLY the receiving cell re-solves (a 1-lane ``bucket='exact'``
+        warm solve, like a join), with the newcomer's allocation row
+        seeded from its source-cell solved outcome so the GD solve starts
+        from where the user's split/power already converged.
+
+        The source cell is left alone — no solve on departure (like
+        ``remove_cell``), its drift reference untouched.  Its vacated
+        slot keeps the last posted threshold as a placeholder: QoE aging
+        relaxes it like any idle user's, and the next arrival on the slot
+        overwrites it — the solver never chases a departed user's tight
+        deadline for long.  Survivors (every lane but ``dst_lane``) keep
+        their installed schedules object-identical through the single
+        version bump (``swap_schedules``).  Serialised against admission
+        rounds and other churn via ``_round_lock``."""
+        with self._round_lock:
+            if self._q is None:
+                raise RuntimeError("bootstrap() before cell churn")
+            src_lane, dst_lane = int(src_lane), int(dst_lane)
+            user = int(user)
+            dst_user = user if dst_user is None else int(dst_user)
+            n_cells, n_users = self._q.shape
+            for name, lane in (("src", src_lane), ("dst", dst_lane)):
+                if not 0 <= lane < n_cells:
+                    raise ValueError(f"{name} cell {lane} out of range "
+                                     f"[0, {n_cells})")
+            if src_lane == dst_lane:
+                raise ValueError(
+                    f"move_user src and dst are the same cell ({src_lane})")
+            for name, u in (("user", user), ("dst_user", dst_user)):
+                if not 0 <= u < n_users:
+                    raise ValueError(
+                        f"{name} {u} out of range [0, {n_users})")
+            now = self.clock()
+            # ONE state-lock hold over the threshold transfer and the
+            # queue rewrite: a producer's arrival is either queued before
+            # the remap (and follows the user to its new slot) or
+            # validated against the post-move world — never misdelivered
+            # to whoever inherits the source slot
+            with self._state_lock:
+                self._q[dst_lane, dst_user] = self._q[src_lane, user]
+                self._t_posted[dst_lane, dst_user] = \
+                    self._t_posted[src_lane, user]
+                self.queue.remap(
+                    {b: b for b in range(n_cells)},
+                    users={(src_lane, user): (dst_lane, dst_user)})
+                solved = list(self._live)
+                q = self._effective_q_locked(now)
+            # seed the newcomer's warm-start row from its SOURCE cell's
+            # last solved outcome (None-safe: no source history — e.g.
+            # warm start disabled or the source never solved — just means
+            # no override and the row warm-starts like any other)
+            overrides = None
+            src_out = self.scheduler.last_outcomes[src_lane]
+            if src_out is not None:
+                overrides = {dst_lane: {dst_user: (src_out.alloc, user)}}
+            # outside the state lock, same as an admission round: the
+            # solve must not stall producers.  The scatter is skipped
+            # when the receiver's live snapshot IS the object the
+            # scheduler last solved on (no drift since) — the common
+            # case, and the scatter is the handover's dominant host cost
+            if solved[dst_lane] is not self.scheduler.scns[dst_lane]:
+                self.scheduler.update_scenarios(solved, cells=[dst_lane])
+            t_solve0 = time.perf_counter()
+            sched = self.scheduler.schedule(
+                q, warm=self.warm_start, cells=[dst_lane],
+                bucket="exact", warm_overrides=overrides)[0]
+            solve_s = time.perf_counter() - t_solve0
+            with self._state_lock:
+                version = self.engine.swap_schedules({dst_lane: sched})
+                self._ref[dst_lane] = solved[dst_lane]
+                if self._attainment is not None:
+                    self._attainment[dst_lane] = qoe_attainment(
+                        sched, q[dst_lane])
+            # the receiver just solved out of band: clear its carried
+            # deferral and reset its governor streak so the starvation
+            # bound measures rounds since its schedule was ACTUALLY fresh
+            self._deferred.discard(dst_lane)
+            if self.governor is not None:
+                self.governor.note_solved(dst_lane)
+            rnd = AdmissionRound(
+                version=version, cells=(dst_lane,), n_arrivals=0,
+                drift={}, total_iters=sched.iters, t_start=now,
+                t_installed=self.clock())
+            with self._state_lock:
+                self._last_round_t = rnd.t_installed
+            self.rounds.append(rnd)
+            if self.bus is not None:
+                self.bus.emit("handover", src=src_lane, dst=dst_lane,
+                              user=user, dst_user=dst_user,
+                              version=version, iters=sched.iters,
+                              solve_wall_s=solve_s,
+                              warm_seeded=overrides is not None)
+                if self._attainment is not None:
+                    self.bus.emit(
+                        "qoe_attainment", cell=dst_lane,
+                        attainment=float(self._attainment[dst_lane]),
+                        version=version)
+            self.round_done.set()
+            return rnd
+
     # ---- background solver thread -------------------------------------
     def start(self) -> None:
         """Run admission rounds on a dedicated solver thread.  The thread
@@ -712,6 +844,13 @@ class AdmissionController:
         polling); serving threads keep executing installed schedules."""
         if self._thread is not None:
             raise RuntimeError("admission loop already started")
+        if self.queue.closed:
+            # restart-after-stop footgun: stop() closes the queue, so a
+            # relaunched loop would idle forever over a queue every
+            # producer is rejected from — fail loudly instead
+            raise RuntimeError(
+                "admission queue is closed (controller was stopped); "
+                "build a new controller instead of restarting this one")
         self._stopping.clear()
         self._thread = threading.Thread(
             target=self._run, name="admission-solver", daemon=True)

@@ -275,6 +275,36 @@ class SplitInferenceCluster:
                                  for i, ln in self._lane_of.items()
                                  if ln in old_to_new}
 
+    def move_user(self, src: CellId, dst: CellId, user: int,
+                  dst_user: Optional[int] = None) -> AdmissionRound:
+        """Hand a user over between live cells: its posted QoE threshold
+        (and age) and any queued arrivals move from slot ``user`` of
+        ``src`` to slot ``dst_user`` (default: same index) of ``dst``,
+        then ONLY the receiving cell re-solves — a 1-lane warm solve with
+        the user's allocation row seeded from its source-cell outcome.
+        The source cell is untouched (no solve, drift reference kept,
+        like ``remove_cell``); every other cell keeps its installed
+        schedule object-identical through the single version bump.
+        Requires a started cluster (there is no staged-mobility notion —
+        restage the user's threshold instead).  Returns the churn
+        ``AdmissionRound`` (``cells == (dst lane,)``)."""
+        self._require_started()
+        with self._lock:
+            # fail fast on bad ids before taking the round lock
+            self._lane(src)
+            self._lane(dst)
+        # round lock FIRST, facade lock second — same churn discipline as
+        # add_cell/remove_cell (lanes resolved again inside: churn between
+        # the check above and here may have moved them)
+        with self.controller.paused():
+            self._churn_fence(
+                f"move_user:{src}->{dst}:{user}->"
+                f"{user if dst_user is None else dst_user}")
+            with self._lock:
+                return self.controller.move_user(
+                    self._lane(src), self._lane(dst), user,
+                    dst_user=dst_user)
+
     def start(self, threaded: bool = True) -> int:
         """Build scheduler/engine/controller over the staged cells, run
         the bootstrap solve, install schedules, and (``threaded=True``)

@@ -143,7 +143,18 @@ class QoSGovernor:
         # lanes always solve, even if that overshoots the cap
         budget = max(cap - len(forced) - len(failing), 0)
         solve = forced + failing + hot[:budget]
-        deferred = hot[budget:] + cold
+        deferred = hot[budget:]
+        # idle-budget fill: when the hot list leaves solve slots unused,
+        # cold cells take them (longest defer streak first, lane index
+        # tiebreak) instead of deferring for nothing — un-filled slots
+        # just let streaks accrue until the starvation bound forces every
+        # cold cell in at once, overshooting the cap it was protecting
+        leftover = budget - len(hot)
+        if leftover > 0:
+            cold.sort(key=lambda c: (-self._defer_count.get(c, 0), c))
+            solve += cold[:leftover]
+            cold = cold[leftover:]
+        deferred += cold
 
         for c in solve:
             self._defer_count.pop(c, None)
@@ -160,6 +171,14 @@ class QoSGovernor:
         self._defer_count = {old_to_new[c]: n
                              for c, n in self._defer_count.items()
                              if c in old_to_new}
+
+    def note_solved(self, lane: int) -> None:
+        """Reset ``lane``'s deferral streak after an out-of-band solve
+        (handover: ``move_user`` re-solves the receiving cell outside any
+        admission round).  The starvation bound should count rounds since
+        the lane's schedule was actually fresh, not since ``review`` last
+        happened to pick it."""
+        self._defer_count.pop(int(lane), None)
 
     def defer_count(self, lane: int) -> int:
         """Current consecutive-deferral streak of ``lane`` (tests)."""

@@ -37,6 +37,19 @@ from repro.core import era, ligd, network, noma, profiles
 from repro.core.era import Weights
 
 
+@jax.jit
+def _scatter_lanes(leaves_b, lane_leaves, idx):
+    """One compiled dispatch scattering k lanes' scenario leaves into the
+    stacked batch: ``leaves_b[j][idx] = stack(lane_leaves[*][j])``.
+    Replaces the per-leaf-per-lane ``.at[b].set`` chain (~27 leaves × k
+    dispatches — the dominant host cost of a partial-round refresh and of
+    ``move_user``'s drifted-receiver path).  ``idx`` is traced, so the
+    compile caches on (leaf shapes, k) only — the same O(log B)-ish
+    footprint as the bucket ladder."""
+    return [xb.at[idx].set(jnp.stack([lv[j] for lv in lane_leaves]))
+            for j, xb in enumerate(leaves_b)]
+
+
 def bucket_sizes(n_cells: int) -> List[int]:
     """The padded-batch ladder for partial rounds: powers of two below
     n_cells, plus n_cells itself — at most O(log B) compiled variants."""
@@ -262,17 +275,21 @@ class MultiCellScheduler:
         # pytree, so lanes with different (structurally compatible) cfg
         # aux still line up leaf-for-leaf
         leaves_b, treedef_b = jax.tree_util.tree_flatten(self.prep.scn_b)
+        lane_leaves = []
         for b in cells:
             leaves_v = jax.tree_util.tree_leaves(scns[b])
             if len(leaves_v) != len(leaves_b):
-                # zip would silently truncate a structurally incompatible
-                # scenario into the wrong leaf slots
+                # a structurally incompatible scenario would silently land
+                # in the wrong leaf slots
                 raise ValueError(
                     f"scenario for cell {b} has {len(leaves_v)} pytree "
                     f"leaves, stacked batch has {len(leaves_b)}")
             self.scns[b] = scns[b]
-            leaves_b = [xb.at[b].set(xv)
-                        for xb, xv in zip(leaves_b, leaves_v)]
+            lane_leaves.append(leaves_v)
+        if lane_leaves:
+            leaves_b = _scatter_lanes(
+                leaves_b, lane_leaves,
+                jnp.asarray([int(b) for b in cells]))
         self.prep = self.prep._replace(
             scn_b=jax.tree_util.tree_unflatten(treedef_b, leaves_b),
             scn_list=tuple(self.scns),
@@ -377,16 +394,45 @@ class MultiCellScheduler:
             hetero=network.envs_differ(scns),
         )
 
-    def _warm_init(self, lanes: Sequence[int]):
+    def _warm_init(self, lanes: Sequence[int],
+                   overrides: Dict[int, Dict] = None):
         """Warm-start Allocation for ``lanes`` from the previous outcomes;
         lanes without history (post-resize joiners) seed from the
-        uninformed point.  None when no lane has history."""
+        uninformed point.  None when no lane has history (and no
+        overrides).
+
+        ``overrides``: per-user row grafts for handover —
+        ``{lane: {dst_user: (src_alloc, src_user)}}`` replaces the lane's
+        warm-start row ``dst_user`` (every Allocation leaf's leading axis
+        is U) with row ``src_user`` of ``src_alloc``, the moved user's
+        solved allocation from its SOURCE cell.  With overrides present
+        the init is built even without history (the grafted row is the
+        whole point); padded duplicate lanes get the same graft, which is
+        harmless — they are dropped from the result."""
         outs = self.last_outcomes
-        if not outs or all(outs[i] is None for i in lanes):
+        has_hist = bool(outs) and any(outs[i] is not None for i in lanes)
+        if not has_hist and not overrides:
             return None
-        return ligd.stack_allocs([
-            outs[i].alloc if outs[i] is not None
-            else era.uniform_alloc(self.scns[i]) for i in lanes])
+        outs = outs if outs else [None] * self.n_cells
+        allocs = [outs[i].alloc if outs[i] is not None
+                  else era.uniform_alloc(self.scns[i]) for i in lanes]
+        if overrides:
+            # host-side graft: a handover is a latency-sensitive churn
+            # op, and a per-leaf jax scatter costs ~ms of dispatch where
+            # a numpy row copy is free (solve_batch converts the stacked
+            # init to device arrays once anyway)
+            def _graft(x, s, d, su):
+                x = np.array(x)
+                x[d] = np.asarray(s)[su]
+                return x
+            for j, lane in enumerate(lanes):
+                for dst_u, (src_alloc, src_u) in \
+                        (overrides.get(lane) or {}).items():
+                    allocs[j] = jax.tree.map(
+                        lambda x, s, d=int(dst_u), su=int(src_u):
+                            _graft(x, s, d, su),
+                        allocs[j], src_alloc)
+        return ligd.stack_allocs(allocs)
 
     def _prep_subset(self, lanes: Sequence[int]) -> ligd.BatchPrep:
         """BatchPrep for a padded lane subset, sliced out of the full prep
@@ -408,13 +454,17 @@ class MultiCellScheduler:
 
     def schedule(self, q_per_cell, *, warm: bool = False,
                  init_alloc=None, cells: Sequence[int] = None,
-                 bucket: str = None) -> List[Schedule]:
+                 bucket: str = None,
+                 warm_overrides: Dict[int, Dict] = None) -> List[Schedule]:
         """One batched solve -> one Schedule per cell.
 
         ``warm=True`` seeds the solve from the previous ``schedule`` call's
         solved allocations (``ligd.warm_start_from``) — the admission
         loop's cross-round warm start; ``init_alloc`` overrides the seed
-        explicitly.
+        explicitly.  ``warm_overrides`` grafts individual users' rows into
+        the warm seed (see ``_warm_init``) — the handover path's
+        carry-your-allocation-with-you mechanism; ignored when the solve
+        is not warm (cold solves ignore history by definition).
 
         ``cells``: solve only this cell subset (a partial admission
         round), padded per the ``bucket`` policy (default: the spec's —
@@ -427,9 +477,11 @@ class MultiCellScheduler:
         if cells is not None:
             return self._schedule_subset(q, list(cells), warm=warm,
                                          init_alloc=init_alloc,
-                                         bucket=bucket)
-        if init_alloc is None and warm and self.last_outcomes:
-            init_alloc = self._warm_init(range(self.n_cells))
+                                         bucket=bucket,
+                                         warm_overrides=warm_overrides)
+        if init_alloc is None and warm:
+            init_alloc = self._warm_init(range(self.n_cells),
+                                         overrides=warm_overrides)
         outs = ligd.solve_batch(self.scns, self.prof, q, self.weights,
                                 spec=self.spec, prep=self.prep,
                                 init_alloc=init_alloc)
@@ -438,7 +490,8 @@ class MultiCellScheduler:
                 for scn, out in zip(self.scns, outs)]
 
     def _schedule_subset(self, q, cells: List[int], *, warm: bool,
-                         init_alloc=None, bucket: str = None
+                         init_alloc=None, bucket: str = None,
+                         warm_overrides: Dict[int, Dict] = None
                          ) -> List[Schedule]:
         if not cells:
             return []
@@ -461,7 +514,7 @@ class MultiCellScheduler:
             else self._prep_subset(lanes)
         q_sub = q[jnp.asarray(lanes)]
         if init_alloc is None and warm:
-            init_alloc = self._warm_init(lanes)
+            init_alloc = self._warm_init(lanes, overrides=warm_overrides)
         # subset rounds run host-local under a multi-process multihost
         # spec (same GD statics => bitwise-identical per-lane results)
         outs = ligd.solve_batch(None, None, q_sub, self.weights,

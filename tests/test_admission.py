@@ -737,3 +737,79 @@ def test_controller_remap_races_live_producers(monkeypatch):
     rnd = ctl.step()
     if rnd is not None:
         assert all(c < 2 for c in rnd.cells)
+
+
+# --------------------------------------------- per-(cell, user) queue remap
+def test_queue_remap_per_user_moves_matching_arrivals():
+    q = AdmissionQueue()
+    q.submit(Arrival(cell=0, user=1, q_s=0.1, t=0.0))   # the moved slot
+    q.submit(Arrival(cell=0, user=2, q_s=0.2, t=0.0))   # same cell, stays
+    q.submit(Arrival(cell=1, user=1, q_s=0.3, t=0.0))   # same user, stays
+    q.mark_dirty(0)
+    q.remap({0: 0, 1: 1}, users={(0, 1): (1, 4)})
+    arrivals, dirty = q.drain()
+    # the matching arrival lands on the new absolute slot; the rest
+    # follow the (identity) cell map untouched
+    assert [(a.cell, a.user, a.q_s) for a in arrivals] == [
+        (1, 4, 0.1), (0, 2, 0.2), (1, 1, 0.3)]
+    assert dirty == {0}
+
+
+def test_queue_remap_per_user_slot_not_cell_remapped_again():
+    # the per-user target is in POST-remap coordinates: a handover
+    # composed with a leave must not run the moved arrival through the
+    # cell map a second time
+    q = AdmissionQueue()
+    q.submit(Arrival(cell=2, user=0, q_s=0.1, t=0.0))
+    q.submit(Arrival(cell=1, user=3, q_s=0.2, t=0.0))
+    # cell 0 leaves (1->0, 2->1) while (2, 0) moves to slot (0, 5)
+    q.remap({1: 0, 2: 1}, users={(2, 0): (0, 5)})
+    arrivals, _ = q.drain()
+    assert [(a.cell, a.user) for a in arrivals] == [(0, 5), (0, 3)]
+
+
+def test_queue_remap_per_user_drop_on_departure():
+    q = AdmissionQueue()
+    q.submit(Arrival(cell=0, user=1, q_s=0.1, t=0.0))
+    q.submit(Arrival(cell=0, user=2, q_s=0.2, t=0.0))
+    # user (0, 1) departs the fleet: mapped to None -> dropped
+    q.remap({0: 0}, users={(0, 1): None})
+    arrivals, _ = q.drain()
+    assert [(a.cell, a.user) for a in arrivals] == [(0, 2)]
+
+
+def test_move_user_rewrites_queued_arrival_to_destination():
+    engine, ctl, clock, _ = _make(n_cells=2)
+    ctl.bootstrap(_q0(ctl))
+    clock.advance(1.0)
+    ctl.submit(0, 3, 0.11)          # queued on the source slot
+    ctl.submit(1, 2, 0.22)          # unrelated, must not move
+    ctl.move_user(0, 1, 3, dst_user=5)
+    rnd = ctl.step()
+    # the queued arrival followed the user: its threshold landed on the
+    # destination slot, the source slot kept its pre-arrival value
+    assert rnd is not None
+    q = ctl.current_q()
+    assert q[1, 5] == np.float32(0.11)
+    assert q[0, 3] == np.float32(0.4)
+    assert q[1, 2] == np.float32(0.22)
+
+
+# -------------------------------------------------------- restart-after-stop
+def test_start_after_stop_raises_threaded():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    ctl.start()
+    ctl.stop(drain=True)
+    # the queue is closed: a restarted loop would idle forever while
+    # every producer gets "admission queue is closed" — fail loudly
+    with pytest.raises(RuntimeError, match="closed"):
+        ctl.start()
+
+
+def test_start_after_stop_raises_sync():
+    engine, ctl, clock, _ = _make()
+    ctl.bootstrap(_q0(ctl))
+    ctl.stop(drain=False)           # sync use: no thread ever started
+    with pytest.raises(RuntimeError, match="closed"):
+        ctl.start()

@@ -188,11 +188,14 @@ def _apply_churn_ops(ops):
     thresholds match the model and that untouched survivors keep their
     warm-start outcome and drift reference OBJECTS.  Ops:
       ("add", _) ("remove", i) ("submit", i, user, q) ("observe", i, seed)
-      ("step",) — cell choices index into the live id list modulo its
-    length, so every generated sequence is valid."""
+      ("move", i, j, user) ("step",) — cell choices index into the live
+    id list modulo its length, so every generated sequence is valid."""
     cl, ids, clock = _cluster(n=2)
     model = {c: {"q": np.full(N_USERS, 0.4, np.float32)} for c in ids}
-    queued = {}                          # id -> [(user, q_s)] not yet drained
+    # GLOBAL submission-ordered queue [(id, user, q_s)]: a handover
+    # rewrites queued slots across cells, so per-cell lists would lose
+    # the cross-cell arrival order the real drain applies
+    queued = []
     dirty = set()                        # ids past the drift threshold
     seed = 100
     try:
@@ -213,14 +216,15 @@ def _apply_churn_ops(ops):
                 victim = live[op[1] % len(live)]
                 cl.remove_cell(victim)
                 del model[victim]
-                queued.pop(victim, None)   # its queued arrivals drop too
+                # its queued arrivals drop too
+                queued = [e for e in queued if e[0] != victim]
                 dirty.discard(victim)
             elif op[0] == "submit":
                 cid = live[op[1] % len(live)]
                 cl.submit(cid, op[2], op[3])
                 # posted thresholds land in controller state when the
                 # arrival is DRAINED (step), not at submit — model likewise
-                queued.setdefault(cid, []).append((op[2], op[3]))
+                queued.append((cid, op[2], op[3]))
             elif op[0] == "observe":
                 cid = live[op[1] % len(live)]
                 drifted = network.evolve_scenario(
@@ -228,16 +232,30 @@ def _apply_churn_ops(ops):
                     jax.random.PRNGKey(op[2]), rho=0.3)
                 if cl.observe(cid, drifted) > cl.drift_threshold:
                     dirty.add(cid)
+            elif op[0] == "move":
+                if len(live) < 2:
+                    continue
+                src = live[op[1] % len(live)]
+                dst = live[op[2] % len(live)]
+                if src == dst:
+                    continue
+                user = op[3]
+                cl.move_user(src, dst, user)
+                # the posted threshold transfers; queued arrivals on the
+                # source slot follow (order preserved); ONLY dst re-solves
+                model[dst]["q"][user] = model[src]["q"][user]
+                queued = [(dst, user, q) if (c == src and u == user)
+                          else (c, u, q) for c, u, q in queued]
+                touched = {dst}
             elif op[0] == "step":
                 rnd = cl.step()
                 if rnd is not None:
                     touched = {c for c in cl.cell_ids()
                                if cl.lane_of(c) in rnd.cells}
-                    assert touched == set(queued) | dirty
-                    for cid, posts in queued.items():
-                        for user, q_s in posts:   # drained in order
-                            model[cid]["q"][user] = q_s
-                    queued, dirty = {}, set()
+                    assert touched == {c for c, _, _ in queued} | dirty
+                    for cid, user, q_s in queued:   # drained in order
+                        model[cid]["q"][user] = q_s
+                    queued, dirty = [], set()
 
             # --- invariants over every surviving cell -------------------
             assert set(cl.cell_ids()) == set(model)
@@ -273,6 +291,8 @@ def test_churn_interleavings_preserve_survivor_state():
                       st.floats(0.05, 1.0, allow_nan=False)),
             st.tuples(st.just("observe"), st.integers(0, 7),
                       st.integers(1, 1000)),
+            st.tuples(st.just("move"), st.integers(0, 7),
+                      st.integers(0, 7), st.integers(0, N_USERS - 1)),
             st.tuples(st.just("step"),),
         ),
         min_size=1, max_size=7)
@@ -296,7 +316,7 @@ def test_churn_interleavings_seeded():
         ops = []
         for _ in range(int(rng.integers(3, 8))):
             kind = rng.choice(["add", "remove", "submit", "observe",
-                               "step"])
+                               "move", "step"])
             if kind == "add":
                 ops.append(("add", int(rng.integers(8))))
             elif kind == "remove":
@@ -308,6 +328,10 @@ def test_churn_interleavings_seeded():
             elif kind == "observe":
                 ops.append(("observe", int(rng.integers(8)),
                             int(rng.integers(1, 1000))))
+            elif kind == "move":
+                ops.append(("move", int(rng.integers(8)),
+                            int(rng.integers(8)),
+                            int(rng.integers(N_USERS))))
             else:
                 ops.append(("step",))
         _apply_churn_ops(ops)

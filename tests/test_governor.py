@@ -47,7 +47,7 @@ def test_inert_round_resets_defer_streaks():
 
 # ---------------------------------------------------------- deferral band
 def test_deferral_band_splits_hot_from_cold():
-    gov = _gov(max_solve_frac=1.0)
+    gov = _gov(max_solve_frac=0.5)              # cap = 2: budget is full
     drift = {0: 0.50, 1: 0.34, 2: 0.36, 3: 0.0}
     d = gov.review([0, 1, 2, 3], drift, HEALTHY, n_cells=4)
     assert d.engaged
@@ -58,10 +58,30 @@ def test_deferral_band_splits_hot_from_cold():
 
 
 def test_arrival_only_cells_read_zero_drift():
-    gov = _gov(max_solve_frac=1.0)
+    gov = _gov(max_solve_frac=0.5)              # cap = 1: budget is full
     # lane 1 touched by arrivals only (absent from drift map) -> cold
     d = gov.review([0, 1], {0: 0.5}, HEALTHY, n_cells=2)
     assert d.solve == (0,) and d.deferred == (1,)
+
+
+def test_idle_budget_filled_from_cold_longest_streak_first():
+    gov = _gov(max_solve_frac=0.5)              # cap = 2 at n_cells=4
+    # all cold: the cap's two slots go to cold lanes instead of sitting
+    # idle while every lane defers and accrues streak
+    d = gov.review([0, 1, 2, 3], {}, HEALTHY, n_cells=4)
+    assert d.solve == (0, 1) and d.deferred == (2, 3)
+    # next round the longest streaks (2, 3) take the slots
+    d = gov.review([0, 1, 2, 3], {}, HEALTHY, n_cells=4)
+    assert d.solve == (2, 3) and d.deferred == (0, 1)
+
+
+def test_no_cell_defers_while_budget_idle():
+    gov = _gov(max_solve_frac=1.0)
+    # budget covers the whole fleet: an engaged round defers nothing
+    d = gov.review(list(range(8)), {0: 0.9}, HEALTHY, n_cells=8)
+    assert d.engaged and d.deferred == ()
+    assert sorted(d.solve) == list(range(8))
+    assert all(gov.defer_count(c) == 0 for c in range(8))
 
 
 # ------------------------------------------------- prioritisation ordering
@@ -76,7 +96,7 @@ def test_failing_cells_prioritised_worst_first():
 
 
 def test_failing_cells_never_deferred_even_when_cold():
-    gov = _gov(max_solve_frac=1.0)
+    gov = _gov(max_solve_frac=0.5)              # cap = 1, eaten by 0
     att = [0.2, 1.0]
     d = gov.review([0, 1], {}, att, n_cells=2)  # both zero drift
     assert 0 in d.solve and d.prioritised == (0,)
@@ -84,7 +104,7 @@ def test_failing_cells_never_deferred_even_when_cold():
 
 
 def test_nan_attainment_reads_healthy():
-    gov = _gov(max_solve_frac=1.0)
+    gov = _gov(max_solve_frac=0.5)              # cap = 1: budget is full
     d = gov.review([0, 1], {0: 0.5}, [math.nan, math.nan], n_cells=2)
     assert d.prioritised == ()
     assert d.solve == (0,) and d.deferred == (1,)
@@ -116,35 +136,50 @@ def test_prioritised_overflow_never_trimmed():
 
 # ---------------------------------------------------------- starvation
 def test_all_dirty_forced_round_after_max_deferrals():
-    gov = _gov(max_defer_rounds=2, max_solve_frac=1.0)
+    gov = _gov(max_defer_rounds=2, max_solve_frac=0.25)   # cap = 1
     touched = list(range(4))
-    for i in range(2):
-        d = gov.review(touched, {}, HEALTHY, n_cells=4)   # all cold
-        assert d.solve == () and d.deferred == (0, 1, 2, 3)
-        assert gov.defer_count(0) == i + 1
+    d = gov.review(touched, {}, HEALTHY, n_cells=4)       # all cold
+    assert d.solve == (0,) and d.deferred == (1, 2, 3)
+    # the longest-streak cold lane takes the idle slot next
     d = gov.review(touched, {}, HEALTHY, n_cells=4)
-    # third round: every lane hit the starvation bound -> forced solve
-    assert d.forced == (0, 1, 2, 3)
-    assert d.solve == (0, 1, 2, 3) and d.deferred == ()
-    assert all(gov.defer_count(c) == 0 for c in touched)
+    assert d.solve == (1,) and d.deferred == (0, 2, 3)
+    assert gov.defer_count(2) == 2 and gov.defer_count(3) == 2
+    d = gov.review(touched, {}, HEALTHY, n_cells=4)
+    # lanes 2 and 3 hit the starvation bound together -> both forced,
+    # overshooting the cap (forced lanes are never trimmed)
+    assert d.forced == (2, 3)
+    assert d.solve == (2, 3) and d.deferred == (0, 1)
+    assert gov.defer_count(2) == 0 and gov.defer_count(3) == 0
 
 
 def test_forced_cells_lead_the_solve_order():
-    gov = _gov(max_defer_rounds=1, max_solve_frac=1.0)
-    # round 1: lanes 0 and 2 defer (cold); lane 1 is hot and solves
-    gov.review([0, 1, 2], {1: 0.9}, HEALTHY, n_cells=3)
-    att = [1.0, 0.5, 1.0]
+    gov = _gov(max_defer_rounds=1, max_solve_frac=0.5)
+    # round 1 (cap 2): hot lane 1 solves, the idle slot pulls in lane 0,
+    # lane 2 defers straight to the starvation bound
+    d = gov.review([0, 1, 2], {1: 0.9}, HEALTHY, n_cells=3)
+    assert d.solve == (1, 0) and d.deferred == (2,)
+    att = [1.0, 0.5, 1.0, 1.0]
     d = gov.review([0, 1, 2, 3], {3: 0.9}, att, n_cells=4)
-    # forced (lane order) > failing > hot
-    assert d.forced == (0, 2)
-    assert d.solve == (0, 2, 1, 3)
+    # forced (lane order) > failing > hot; forced+failing eat the cap
+    assert d.forced == (2,)
+    assert d.solve == (2, 1)
+    assert d.deferred == (0, 3)
 
 
 def test_solving_resets_streak_deferring_extends_it():
-    gov = _gov(max_defer_rounds=3, max_solve_frac=1.0)
-    gov.review([0, 1], {}, HEALTHY, n_cells=2)         # both deferred
+    gov = _gov(max_defer_rounds=3, max_solve_frac=0.5)    # cap = 1
+    gov.review([0, 1], {}, HEALTHY, n_cells=2)         # 0 fills, 1 defers
     gov.review([0, 1], {0: 0.9}, HEALTHY, n_cells=2)   # 0 solves, 1 defers
     assert gov.defer_count(0) == 0 and gov.defer_count(1) == 2
+
+
+def test_note_solved_resets_streak():
+    gov = _gov(max_solve_frac=0.25)                    # cap = 1
+    gov.review([0, 1, 2, 3], {3: 0.9}, HEALTHY, n_cells=4)
+    assert gov.defer_count(1) == 1
+    # an out-of-band solve (move_user's receiver) resets only that lane
+    gov.note_solved(1)
+    assert gov.defer_count(1) == 0 and gov.defer_count(2) == 1
 
 
 # ---------------------------------------------------------- determinism
@@ -165,9 +200,10 @@ def test_decisions_deterministic():
 
 # --------------------------------------------------------------- churn
 def test_remap_carries_streaks_drops_removed():
-    gov = _gov(max_solve_frac=1.0)
-    gov.review([0, 1, 2], {}, HEALTHY, n_cells=3)      # streak 1 each
-    gov.review([0, 1, 2], {}, HEALTHY, n_cells=3)      # streak 2 each
+    gov = _gov(max_solve_frac=0.25)                    # cap = 1
+    # hot lane 3 absorbs the whole budget, so 0..2 defer both rounds
+    gov.review([0, 1, 2, 3], {3: 0.9}, HEALTHY, n_cells=4)
+    gov.review([0, 1, 2, 3], {3: 0.9}, HEALTHY, n_cells=4)
     gov.remap({0: 0, 2: 1})                            # lane 1 removed
     assert gov.defer_count(0) == 2
     assert gov.defer_count(1) == 2      # was lane 2

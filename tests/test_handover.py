@@ -1,0 +1,296 @@
+"""Cross-cell user handover (``move_user``): per-(lane, user) state
+transfer, the 1-lane receiver-only warm re-solve with the moved user's
+allocation row grafted from its source cell, churn discipline (survivors
+object-identical through one version bump), governor streak carry, the
+``handover`` telemetry stream, and the 10^3-user mobility-trace smoke.
+
+Deterministic: fake clock, sync admission, tiny solves — same idioms as
+tests/test_cluster.py.  The bitwise warm-seed assertions spy on
+``ligd.solve_batch`` and compare the ``init_alloc`` the solve was GIVEN
+(``solve_batch`` softens the channel indicators internally, so the
+outcome's alloc is NOT the seed — the seed row is)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ligd as ligd_mod
+from repro.core import network, profiles
+from repro.core.ligd import SolverSpec
+from repro.serving.cluster import SplitInferenceCluster
+from repro.serving.governor import QoSGovernor
+from repro.telemetry import TelemetryBus
+
+pytestmark = pytest.mark.handover
+
+N_USERS = 6
+N_SUBCH = 3
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _scn(seed):
+    cfg = network.small_config(n_users=N_USERS, n_subchannels=N_SUBCH)
+    return network.make_scenario(jax.random.PRNGKey(seed), cfg)
+
+
+def _cluster(n=3, **kw):
+    spec = kw.pop("spec", SolverSpec(max_steps=5, tol=0.0))
+    clock = FakeClock()
+    cl = SplitInferenceCluster(None, None, profiles.get_profile("nin"),
+                               spec=spec, clock=clock, default_q_s=0.4,
+                               drift_threshold=0.15, **kw)
+    ids = [cl.add_cell(_scn(s)) for s in range(n)]
+    cl.start(threaded=False)
+    return cl, ids, clock
+
+
+def _alloc_rows(alloc, u):
+    """One user's row of every Allocation leaf, as numpy."""
+    return [np.asarray(leaf)[u] for leaf in alloc]
+
+
+# ------------------------------------------------------ the core contract
+def test_move_user_solves_only_receiver(monkeypatch):
+    cl, (a, b, c), clock = _cluster()
+    clock.advance(1.0)
+    cl.submit(a, 2, 0.17)
+    cl.step()
+
+    before = {cid: cl.installed_schedule(cid) for cid in (a, b, c)}
+    out_a, ref_a = cl.last_outcome(a), cl.drift_reference(a)
+    ver0 = cl.schedule_version
+    solved_lane_counts = []
+    orig = ligd_mod.solve_batch
+
+    def spy(*args, **kw):
+        outs = orig(*args, **kw)
+        solved_lane_counts.append(len(outs))
+        return outs
+
+    monkeypatch.setattr(ligd_mod, "solve_batch", spy)
+    rnd = cl.move_user(a, b, 2)
+    # exactly ONE 1-lane solve: the receiver; the source solves nothing
+    assert solved_lane_counts == [1]
+    assert rnd.cells == (cl.lane_of(b),)
+    # one version bump, survivors' schedules object-identical
+    assert cl.schedule_version == ver0 + 1
+    assert cl.installed_schedule(a) is before[a]
+    assert cl.installed_schedule(c) is before[c]
+    assert cl.installed_schedule(b) is not before[b]
+    # the source's drift reference and warm-start outcome are untouched
+    assert cl.last_outcome(a) is out_a
+    assert cl.drift_reference(a) is ref_a
+    # the threshold transferred; the vacated slot keeps its placeholder
+    assert cl.posted_q(b)[2] == np.float32(0.17)
+    assert cl.posted_q(a)[2] == np.float32(0.17)
+    cl.stop()
+
+
+def test_move_user_transfers_threshold_age():
+    cl, (a, b, _), clock = _cluster(qoe_half_life_s=10.0, q_age_cap=4.0)
+    clock.advance(1.0)
+    cl.submit(a, 3, 0.1)               # posted at t=1
+    cl.step()
+    clock.advance(10.0)                # one half-life idle
+    cl.move_user(a, b, 3, dst_user=0)
+    # the age travelled with the threshold: the destination slot reads
+    # one half-life old (doubled), not freshly posted
+    assert cl.effective_q(b)[0] == pytest.approx(0.2, rel=1e-3)
+    assert cl.posted_q(b)[0] == np.float32(0.1)
+    cl.stop()
+
+
+def test_warm_seed_row_grafted_bitwise(monkeypatch):
+    cl, (a, b, _), clock = _cluster()
+    clock.advance(1.0)
+    cl.submit(a, 4, 0.21)
+    cl.step()
+    src_rows = _alloc_rows(cl.last_outcome(a).alloc, 4)
+    dst_out_before = cl.last_outcome(b)
+
+    seeds = []
+    orig = ligd_mod.solve_batch
+
+    def spy(*args, **kw):
+        seeds.append(kw.get("init_alloc"))
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(ligd_mod, "solve_batch", spy)
+    cl.move_user(a, b, 4, dst_user=1)
+    # the receiver's 1-lane solve was seeded from its own previous
+    # outcome with the moved user's row replaced by the SOURCE cell's
+    # solved row — bitwise, before any in-solve softening
+    assert len(seeds) == 1 and seeds[0] is not None
+    init = seeds[0]
+    for leaf, src_row in zip(init, src_rows):
+        np.testing.assert_array_equal(np.asarray(leaf)[0, 1], src_row)
+    # the other users' rows come from the receiver's own history
+    for leaf, hist in zip(init, dst_out_before.alloc):
+        for u in range(N_USERS):
+            if u != 1:
+                np.testing.assert_array_equal(np.asarray(leaf)[0, u],
+                                              np.asarray(hist)[u])
+    cl.stop()
+
+
+def test_a_b_a_roundtrip_pins_warm_row(monkeypatch):
+    cl, (a, b, _), clock = _cluster()
+    clock.advance(1.0)
+    cl.submit(a, 0, 0.19)
+    cl.step()
+
+    seeds = []
+    orig = ligd_mod.solve_batch
+
+    def spy(*args, **kw):
+        seeds.append(kw.get("init_alloc"))
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(ligd_mod, "solve_batch", spy)
+    cl.move_user(a, b, 0)
+    rows_after_b = _alloc_rows(cl.last_outcome(b).alloc, 0)
+    cl.move_user(b, a, 0)
+    # coming home, the user's warm row is bitwise the row B just solved
+    # for it — the allocation follows the user through the round trip
+    assert len(seeds) == 2
+    for leaf, row_b in zip(seeds[1], rows_after_b):
+        np.testing.assert_array_equal(np.asarray(leaf)[0, 0], row_b)
+    # and the posted threshold round-trips to its original slot
+    assert cl.posted_q(a)[0] == np.float32(0.19)
+    cl.stop()
+
+
+def test_move_user_without_warm_start(monkeypatch):
+    cl, (a, b, _), clock = _cluster(
+        spec=SolverSpec(max_steps=5, tol=0.0, warm=False))
+    seeds = []
+    orig = ligd_mod.solve_batch
+
+    def spy(*args, **kw):
+        seeds.append(kw.get("init_alloc"))
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(ligd_mod, "solve_batch", spy)
+    rnd = cl.move_user(a, b, 1)
+    # warm start disabled: the override is moot, the solve runs cold —
+    # handover still works, it just doesn't carry the allocation
+    assert rnd.cells == (cl.lane_of(b),)
+    assert seeds == [None]
+    cl.stop()
+
+
+def test_queued_arrival_follows_the_move():
+    cl, (a, b, _), clock = _cluster()
+    clock.advance(1.0)
+    cl.submit(a, 5, 0.13)              # queued, not yet drained
+    cl.move_user(a, b, 5, dst_user=2)
+    rnd = cl.step()
+    assert rnd is not None
+    # the queued threshold landed on the DESTINATION slot, not on
+    # whoever inherits the source slot
+    assert cl.posted_q(b)[2] == np.float32(0.13)
+    assert cl.posted_q(a)[5] == np.float32(0.4)
+    cl.stop()
+
+
+# ------------------------------------------------------------- validation
+def test_move_user_validation():
+    cl, (a, b, _), _ = _cluster()
+    with pytest.raises(ValueError, match="same cell"):
+        cl.move_user(a, a, 0)
+    with pytest.raises(ValueError, match="out of range"):
+        cl.move_user(a, b, N_USERS)
+    with pytest.raises(ValueError, match="dst_user"):
+        cl.move_user(a, b, 0, dst_user=-1)
+    with pytest.raises(KeyError, match="unknown"):
+        cl.move_user(a, 999, 0)
+    cl.stop()
+
+
+def test_move_user_requires_started_cluster():
+    cl = SplitInferenceCluster(None, None, profiles.get_profile("nin"),
+                               spec=SolverSpec(max_steps=5, tol=0.0))
+    a = cl.add_cell(_scn(0))
+    b = cl.add_cell(_scn(1))
+    with pytest.raises(RuntimeError, match="start"):
+        cl.move_user(a, b, 0)
+
+
+# ------------------------------------------------------- governor interop
+def test_move_user_resets_receiver_defer_streak():
+    gov = QoSGovernor(max_solve_frac=0.25)      # cap = 1
+    cl, ids, clock = _cluster(n=4, governor=gov)
+    # hot lane 3 absorbs the budget twice: lanes 0..2 build streak 2
+    for _ in range(2):
+        gov.review([0, 1, 2, 3], {3: 0.9}, [1.0] * 4, n_cells=4)
+    assert gov.defer_count(1) == 2 and gov.defer_count(2) == 2
+    cl.move_user(ids[0], ids[1], 0)
+    # the receiver just solved out of band -> its streak resets; the
+    # source's (lane 0) and bystanders' streaks are untouched
+    assert gov.defer_count(1) == 0
+    assert gov.defer_count(0) == 2 and gov.defer_count(2) == 2
+    cl.stop()
+
+
+# ------------------------------------------------------------- telemetry
+def test_handover_stream_emitted():
+    bus = TelemetryBus(capacity=256)
+    cl, (a, b, _), clock = _cluster(bus=bus)
+    bus.clock = clock                  # sim-time stamps, like the driver
+    clock.advance(1.0)
+    cl.move_user(a, b, 3)
+    evs = bus.snapshot("handover")
+    assert len(evs) == 1
+    f = evs[0].fields
+    assert f["src"] == cl.lane_of(a) and f["dst"] == cl.lane_of(b)
+    assert f["user"] == 3 and f["dst_user"] == 3
+    assert f["warm_seeded"] is True
+    assert f["solve_wall_s"] > 0
+    # swap-to-serve continuity: the emitted version IS the installed one
+    assert f["version"] == cl.schedule_version
+    cl.stop()
+
+
+# ------------------------------------------------------- mobility traces
+def test_mobility_trace_moves_are_grid_adjacent():
+    from repro.loadgen import RandomWaypointTrace, make_trace
+    tr = make_trace("mobility", move_rate=5.0)
+    assert isinstance(tr, RandomWaypointTrace)
+    n_cells, n_users = 9, 8            # 3x3 grid
+    moves = tr.moves(0, n_cells, n_users,
+                     np.random.default_rng(7))
+    assert moves                       # rate 5: all-empty is ~impossible
+    for src, dst, u in moves:
+        assert 0 <= u < n_users
+        assert dst in tr.neighbours(src, n_cells)
+    # deterministic: same rng seed -> identical movement matrix
+    again = tr.moves(0, n_cells, n_users, np.random.default_rng(7))
+    assert moves == again
+
+
+def test_mobility_smoke_1k_users():
+    """Tier-1 smoke: 10^3 fake-clock users through the mobility trace —
+    handovers actually happen, the run stays error-free, and the report
+    carries handover p99 next to solve p99."""
+    from repro.loadgen import make_trace, run_load
+    tr = make_trace("mobility", spike_start=2, spike_rounds=8,
+                    move_rate=1.5)
+    rep = run_load(tr, target_users=1_000, n_cells=4, users_per_cell=8,
+                   seed=0)
+    assert rep.trace == "mobility"
+    assert rep.n_users >= 1_000
+    assert rep.handovers > 0
+    assert np.isfinite(rep.p99_handover_ms) and rep.p99_handover_ms > 0
+    assert np.isfinite(rep.p99_solve_ms)
+    assert rep.extra["handover_mode"] == "move"
+    rec = rep.as_record()
+    assert "p99_handover_ms" in rec and "handovers" in rec
